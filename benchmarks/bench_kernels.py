@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks (interpret mode on CPU; TPU is the target).
+
+Times are CPU-interpret wall clock — meaningful for relative comparisons
+and regression tracking, not TPU projections; the derived column carries
+the analytic FLOP count per call for roofline context.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, timed
+
+
+def bench_kernels() -> List[Row]:
+    from repro.kernels import ops
+
+    rows: List[Row] = []
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+
+    B, S, H, d = 1, 512, 4, 64
+    q = jax.random.normal(ks[0], (B, S, H, d))
+    k = jax.random.normal(ks[1], (B, S, H, d))
+    v = jax.random.normal(ks[2], (B, S, H, d))
+    fn = lambda: ops.flash_attention(q, k, v, causal=True).block_until_ready()
+    fn()  # compile
+    us, _ = timed(fn)
+    flops = 4 * B * H * S * S * d / 2
+    rows.append(("kernel_flash_attention_512", us, f"flops/call={flops:.3e}"))
+
+    KV, K = 2, 2048
+    qd = jax.random.normal(ks[3], (B, H, d))
+    kc = jax.random.normal(ks[4], (B, K, KV, d))
+    vc = jax.random.normal(ks[5], (B, K, KV, d))
+    fn = lambda: ops.decode_attention(qd, kc, vc, 1500, 0).block_until_ready()
+    fn()
+    us, _ = timed(fn)
+    rows.append(("kernel_decode_attention_2k", us,
+                 f"flops/call={4 * B * H * 1500 * d:.3e}"))
+
+    Hs, P, N = 2, 16, 32
+    x = jax.random.normal(ks[6], (B, 256, Hs, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[7], (B, 256, Hs)))
+    a = -jnp.exp(jnp.linspace(0., 1., Hs))
+    b = jax.random.normal(jax.random.PRNGKey(9), (B, 256, 1, N))
+    c = jax.random.normal(jax.random.PRNGKey(10), (B, 256, 1, N))
+    fn = lambda: ops.ssd_scan(x, dt, a, b, c, chunk=64)[0].block_until_ready()
+    fn()
+    us, _ = timed(fn)
+    rows.append(("kernel_ssd_scan_256", us, f"state={Hs}x{P}x{N}"))
+
+    xg = jax.random.normal(jax.random.PRNGKey(11), (4, 128, 256))
+    wg = jax.random.normal(jax.random.PRNGKey(12), (4, 256, 128))
+    fn = lambda: ops.grouped_matmul(xg, wg).block_until_ready()
+    fn()
+    us, _ = timed(fn)
+    rows.append(("kernel_grouped_matmul", us,
+                 f"flops/call={2 * 4 * 128 * 256 * 128:.3e}"))
+
+    xr = jax.random.normal(jax.random.PRNGKey(13), (512, 1024))
+    sc = jnp.ones((1024,))
+    fn = lambda: ops.rmsnorm(xr, sc).block_until_ready()
+    fn()
+    us, _ = timed(fn)
+    rows.append(("kernel_rmsnorm", us, "rows=512 d=1024"))
+    return rows
+
+
+ALL = [bench_kernels]

@@ -1,0 +1,299 @@
+"""One benchmark per paper table/figure (UFA, CS.DC 2026).
+
+Each function reproduces the table/figure's quantity from this repo's
+implementation and returns CSV rows (name, us_per_call, derived) where
+``derived`` carries the reproduced numbers next to the paper's claims.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, timed
+
+PAPER_SCALE = 0.05          # fleet synthesized at 5% of Uber's service count
+SEED = 7
+
+
+def _fleet(remediated: bool = True):
+    from repro.core.drills import remediate
+    from repro.core.service import synthesize_fleet, unsafe_edges
+    fleet = synthesize_fleet(scale=PAPER_SCALE, seed=SEED)
+    if remediated:
+        remediate(fleet, set(unsafe_edges(fleet)))
+    return fleet
+
+
+def bench_table1_tiers() -> List[Row]:
+    """Table 1: per-tier baseline core counts."""
+    from repro.core.service import fleet_cores, synthesize_fleet
+    from repro.core.tiers import BASELINE_CORES
+
+    us, fleet = timed(synthesize_fleet, PAPER_SCALE, SEED)
+    cores = fleet_cores(fleet)
+    # fleet carries per-region demand = alloc * 0.25 (see service.py)
+    errs = []
+    for t, c in cores.items():
+        target = BASELINE_CORES[t] * PAPER_SCALE * 0.25
+        errs.append(abs(c - target) / max(1.0, target))
+    derived = (f"tiers=7 total_demand={sum(cores.values()):,.0f} "
+               f"max_tier_err={max(errs):.3f} (target shape: Table 1 x "
+               f"{PAPER_SCALE} scale x 0.25 demand)")
+    return [("table1_tier_capacity", us, derived)]
+
+
+def bench_table2_rpc_matrix() -> List[Row]:
+    """Table 2: cross-tier RPC volume shape + ~50% tier-inverted traffic."""
+    from repro.core.dependency import generate_traces
+    from repro.core.tiers import Tier
+
+    fleet = _fleet()
+    us, (records, _) = timed(generate_traces, fleet, 120_000, SEED)
+    tier_of = {n: s.tier for n, s in fleet.items()}
+    down = sum(1 for r in records
+               if tier_of[r.callee] > tier_of[r.caller])
+    frac = down / max(1, len(records))
+    rate = len(records) / max(1e-9, us / 1e6)
+    derived = (f"rpcs={len(records)} analyzed_at={rate:,.0f}/s "
+               f"to_lower_tier={frac:.2f} (paper: ~0.5 of 62T/wk)")
+    return [("table2_rpc_matrix", us, derived)]
+
+
+def bench_table4_failover_classes() -> List[Row]:
+    """Table 4: per-failure-class behavior and RTO during a peak failover."""
+    from repro.core.capacity import RegionCapacity
+    from repro.core.omg import Orchestrator
+
+    fleet = _fleet()
+
+    def run():
+        region = RegionCapacity.for_fleet("bench", fleet)
+        orch = Orchestrator(fleet, region, scale=PAPER_SCALE)
+        rep = orch.failover(tv_failover=1.0)
+        return orch, rep
+
+    us, (orch, rep) = timed(run, repeat=1)
+    derived = (f"always_on=uninterrupted({rep.always_on_ok}) "
+               f"active_migrate=0s_downtime(MBB,window={rep.am_migrated_at_s:.0f}s) "
+               f"restore_later={rep.rl_restored_at_s:.0f}s(rto_1h_met={rep.rl_rto_met}) "
+               f"terminate=down_until_failback (paper Table 4: secs/secs/1hr/none)")
+    return [("table4_failover_classes", us, derived)]
+
+
+def bench_table5_phased_rollout() -> List[Row]:
+    """Table 5: phased cores returned via readiness reviews."""
+    from repro.core.metrics import phased_rollout
+
+    us, r = timed(phased_rollout)
+    derived = (f"total_returned={r['total_returned']:,} "
+               f"bbm={r['bbm_cores']:,}({r['bbm_fraction']:.0%}) "
+               f"mbb={r['mbb_cores']:,}({r['mbb_fraction']:.0%}) "
+               f"(paper: 1.025M at 54/46; Table 5 classes sum to 484K BBM "
+               f"- the 66K delta sits in partially-BBM AM phases)")
+    return [("table5_phased_cores", us, derived)]
+
+
+def bench_table6_failclose() -> List[Row]:
+    """Table 6: fail-close violations found by runtime vs static analysis."""
+    from repro.core.dependency import runtime_analysis
+    from repro.core.service import synthesize_fleet, unsafe_edges
+    from repro.core.static_analysis import static_analysis
+
+    fleet = synthesize_fleet(scale=0.15, seed=SEED,
+                             unsafe_fraction=0.10)  # un-remediated
+    us_rt, ra = timed(runtime_analysis, fleet, None, SEED, repeat=1)
+    us_st, sa = timed(static_analysis, fleet, SEED, repeat=1)
+    truth = set(unsafe_edges(fleet))
+    static_extra = (sa["found"] - ra["found"]) & truth
+    combined = (ra["found"] | sa["found"]) & truth
+    rt_share = len(ra["found"] & truth) / max(1, len(combined))
+    derived = (f"total={len(truth)} runtime={len(ra['found'] & truth)} "
+               f"static_extra={len(static_extra)} "
+               f"runtime_share={rt_share:.2f} combined_recall="
+               f"{len(combined)/max(1,len(truth)):.2f} "
+               f"(paper: 4155 total = 3041 runtime 73% + 1114 static)")
+    return [("table6_runtime_analysis", us_rt, derived),
+            ("table6_static_analysis", us_st,
+             f"precision={sa['precision']:.2f} recall={sa['recall']:.2f}")]
+
+
+def bench_fig2_3_failover_history() -> List[Row]:
+    """Figs 2/3: failover minutes fraction + yearly counts."""
+    from repro.core.metrics import (failover_counts_history,
+                                    failover_minutes_history)
+
+    us, mins = timed(failover_minutes_history)
+    counts = failover_counts_history()
+    avg_hours = sum(mins.values()) / len(mins) / 60.0
+    worst_frac = max(mins.values()) / (365 * 24 * 60)
+    derived = (f"avg_full_peak_hours_per_year={avg_hours:.1f} "
+               f"worst_year_fraction={worst_frac:.4f} counts={list(counts.values())} "
+               f"(paper: <20h/yr avg, 0.23% at the 2021 anomaly, declining)")
+    return [("fig2_3_failover_history", us, derived)]
+
+
+def bench_fig7_burst_conversion() -> List[Row]:
+    """Fig 7: batch->burst conversion speed (paper: full in ~8 min;
+    240K cores / 2,000 hosts < 20 min)."""
+    from repro.core.capacity import RegionCapacity
+    from repro.core.omg import Orchestrator
+
+    fleet = _fleet()
+
+    def run():
+        region = RegionCapacity.for_fleet("bench", fleet)
+        orch = Orchestrator(fleet, region, scale=PAPER_SCALE)
+        rep = orch.failover(tv_failover=1.0)
+        return region, rep
+
+    us, (region, rep) = timed(run, repeat=1)
+    rate_cores_per_s = region.batch.convertible_cores / max(
+        1.0, rep.burst_full_at_s - (Orchestrator.BATCH_EVICT_S
+                                    + Orchestrator.PREFETCH_S))
+    # paper-scale equivalent: 0.25 cores/host/s * 2000 hosts
+    paper_20min_ok = (240_000 / (0.25 * 2000)) / 60 < 20
+    derived = (f"burst_full_min={rep.burst_full_at_s/60:.1f} "
+               f"spawn_rate={rate_cores_per_s:,.0f}cores/s "
+               f"paper_scale_240k_under_20min={paper_20min_ok} "
+               f"(paper: ~8 min full)")
+    return [("fig7_burst_conversion", us, derived)]
+
+
+def bench_fig8_availability() -> List[Row]:
+    """Fig 8: availability holds at 99.97% through failover+failback."""
+    from repro.core.capacity import RegionCapacity
+    from repro.core.metrics import availability_during_failover
+    from repro.core.omg import Orchestrator
+
+    fleet = _fleet(remediated=True)
+
+    def run():
+        region = RegionCapacity.for_fleet("bench", fleet)
+        orch = Orchestrator(fleet, region, scale=PAPER_SCALE)
+        orch.failover(tv_failover=1.0)
+        series = availability_during_failover(fleet, orch)
+        orch.failback()
+        return series
+
+    us, series = timed(run, repeat=1)
+    mn = min(a for _, a in series)
+    avg = sum(a for _, a in series) / len(series)
+    derived = (f"min_availability={mn:.4f} avg={avg:.4f} "
+               f"(paper: 99.97% held throughout)")
+    return [("fig8_availability", us, derived)]
+
+
+def bench_fig9_container_conversion() -> List[Row]:
+    """Fig 9: container class counts through failover/failback."""
+    from repro.core.capacity import RegionCapacity
+    from repro.core.omg import Orchestrator
+    from repro.core.tiers import FailureClass
+
+    fleet = _fleet()
+
+    def run():
+        region = RegionCapacity.for_fleet("bench", fleet)
+        orch = Orchestrator(fleet, region, scale=PAPER_SCALE)
+        rep = orch.failover(tv_failover=1.0)
+        am_b = orch.class_envs(FailureClass.ACTIVE_MIGRATE, "burst")
+        rl_b = (orch.class_envs(FailureClass.RESTORE_LATER, "burst")
+                + orch.class_envs(FailureClass.RESTORE_LATER, "cloud"))
+        term_down = sum(1 for s in orch.se.values()
+                        if s.spec.failure_class == FailureClass.TERMINATE
+                        and s.placement == "down")
+        orch.failback()
+        restored = sum(1 for s in orch.se.values() if s.placement == "steady")
+        return am_b, rl_b, term_down, restored, len(orch.se)
+
+    us, (am_b, rl_b, term_down, restored, total) = timed(run, repeat=1)
+    derived = (f"am_bursted={am_b} rl_bursted={rl_b} "
+               f"terminate_down_during_failover={term_down} "
+               f"restored_after_failback={restored}/{total} "
+               f"(paper Fig 9 shape: AM converts ~15min, RL restores, "
+               f"Terminate stays down, all back at failback)")
+    return [("fig9_container_conversion", us, derived)]
+
+
+def bench_fig10_region_utilization() -> List[Row]:
+    """Fig 10: surviving-region utilization peaks ~50.2%, within safety."""
+    from repro.core.capacity import RegionCapacity
+    from repro.core.metrics import regional_utilization_series
+    from repro.core.omg import Orchestrator
+
+    fleet = _fleet()
+
+    def run():
+        region = RegionCapacity.for_fleet("bench", fleet)
+        orch = Orchestrator(fleet, region, scale=PAPER_SCALE)
+        orch.failover(tv_failover=1.0)
+        return regional_utilization_series(orch)
+
+    us, series = timed(run, repeat=1)
+    peak = max(u for _, u in series)
+    steady = series[0][1]
+    derived = (f"steady_util={steady:.3f} failover_peak_util={peak:.3f} "
+               f"under_75pct_threshold={peak < 0.75} (paper: 50.2% peak)")
+    return [("fig10_region_utilization", us, derived)]
+
+
+def bench_fig11_fleet_utilization() -> List[Row]:
+    """Fig 11: fleet utilization 20% -> ~31% while returning 1.025M cores."""
+    from repro.core.metrics import phased_rollout
+
+    us, r = timed(phased_rollout)
+    derived = (f"utilization {0.20:.0%} -> {r['final_utilization']:.1%} "
+               f"provisioning {r['provisioning_multiple_before']:.1f}x -> "
+               f"{r['provisioning_multiple_after']:.2f}x "
+               f"(paper: 20%->31%, 2x->1.5x attained, 1.3x goal)")
+    return [("fig11_fleet_utilization", us, derived)]
+
+
+def bench_eviction_rates() -> List[Row]:
+    """§8 eviction analysis: 312/hr failover peak vs 160/hr baseline peak."""
+    from repro.core.eviction import failover_eviction_trace
+
+    us, t = timed(failover_eviction_trace, repeat=1)
+    derived = (f"failover_peak={t['peak']}/hr baseline_peak={t['baseline_peak']}/hr "
+               f"ratio={t['peak_over_baseline']:.2f} (paper: 312 vs 160, ~2x)")
+    return [("eviction_rates", us, derived)]
+
+
+def bench_overcommit() -> List[Row]:
+    """§4.4: O_max = 1.66x analytic; simulator recommends 1.5x."""
+    from repro.core.overcommit_sim import recommend_factor
+    from repro.core.tiers import o_max
+
+    us, r = timed(recommend_factor, repeat=1)
+    derived = (f"o_max={o_max():.2f} recommended={r['recommended']} "
+               f"(paper: O_max=1.66, simulator-recommended 1.5)")
+    return [("overcommit_simulator", us, derived)]
+
+
+def bench_canary_gate() -> List[Row]:
+    """§6: canary gate over a 45-day window of ~8k deployments/week."""
+    from repro.core.canary import CanaryRegressionGate
+
+    fleet = _fleet()
+    gate = CanaryRegressionGate(fleet, seed=11)
+    us, w = timed(gate.run_window, 8000 * 6, repeat=1)
+    derived = (f"deployments={w['deployments']} caught={w['regressions_caught']} "
+               f"shipped={w['regressions_shipped']} (paper: ~3 caught/45d, 0 shipped)")
+    return [("canary_gate", us, derived)]
+
+
+ALL = [
+    bench_table1_tiers,
+    bench_table2_rpc_matrix,
+    bench_table4_failover_classes,
+    bench_table5_phased_rollout,
+    bench_table6_failclose,
+    bench_fig2_3_failover_history,
+    bench_fig7_burst_conversion,
+    bench_fig8_availability,
+    bench_fig9_container_conversion,
+    bench_fig10_region_utilization,
+    bench_fig11_fleet_utilization,
+    bench_eviction_rates,
+    bench_overcommit,
+    bench_canary_gate,
+]

@@ -1,0 +1,25 @@
+"""Shared timing/reporting helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+
+def timed(fn: Callable, *args, repeat: int = 3, **kw) -> Tuple[float, object]:
+    """Median wall time (us) of fn(*args) and its last result."""
+    best = []
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best.append((time.perf_counter() - t0) * 1e6)
+    best.sort()
+    return best[len(best) // 2], out
+
+
+def emit(rows: List[Row]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

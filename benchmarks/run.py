@@ -1,0 +1,39 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark names")
+    ap.add_argument("--no-kernels", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import bench_paper
+    from benchmarks.common import emit
+
+    suites = list(bench_paper.ALL)
+    if not args.no_kernels:
+        from benchmarks import bench_kernels
+        suites += bench_kernels.ALL
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in suites:
+        if args.only and args.only not in fn.__name__:
+            continue
+        try:
+            emit(fn())
+        except Exception as e:
+            failures += 1
+            print(f"{fn.__name__},nan,ERROR {type(e).__name__}: {e}",
+                  file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,88 @@
+"""Distributed-training walkthrough on a (simulated) 8-device mesh:
+FSDP+TP sharded train steps, elastic checkpoint restore onto a smaller
+mesh — the UFA Restore-Later path for a preempted training job.
+
+Spawns itself with XLA_FLAGS=--xla_force_host_platform_device_count=8 so
+the parent process keeps a single device.
+
+  PYTHONPATH=src python examples/train_multihost.py
+"""
+
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+INNER = textwrap.dedent("""
+    import jax, jax.numpy as jnp
+    from repro.dist.ctx import sharding_rules
+    from repro.dist.sharding import param_shardings, train_batch_shardings
+    from repro.data import SyntheticLMDataset
+    from repro.models import LMConfig
+    from repro.train import make_train_state, make_train_step
+    from repro.checkpoint import save_checkpoint, load_checkpoint
+
+    cfg = LMConfig(name="mh", n_layers=4, d_model=128, n_heads=8,
+                   n_kv_heads=4, d_head=16, d_ff=256, vocab_size=512,
+                   tie_embeddings=True)
+    ckdir = {ckdir!r}
+    phase = {phase!r}
+    if phase == "train8":
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        n_steps, start = 6, 0
+    else:
+        mesh = jax.make_mesh((2, 1), ("data", "model"))
+        n_steps, start = 4, 6
+    ps = param_shardings(cfg, mesh)
+    bs = train_batch_shardings(cfg, mesh)
+    step_fn, opt = make_train_step(cfg, n_loss_chunks=2)
+    state = make_train_state(cfg, jax.random.PRNGKey(0), opt)
+    if phase == "resume2":
+        state, _ = load_checkpoint(ckdir, state)    # elastic reshard-on-load
+    state = state._replace(params=jax.device_put(state.params, ps),
+                           opt=state.opt._replace(
+                               m=jax.device_put(state.opt.m, ps),
+                               v=jax.device_put(state.opt.v, ps)))
+    ds = SyntheticLMDataset(vocab_size=512, seq_len=32, global_batch=8, seed=3)
+    def wrapped(state, batch):
+        with sharding_rules(mesh):
+            return step_fn(state, batch)
+    jstep = jax.jit(wrapped, donate_argnums=(0,))
+    with mesh:
+        for i in range(start, start + n_steps):
+            batch = {{k: jax.device_put(v, bs[k])
+                      for k, v in ds.batch(i).items()}}
+            state, m = jstep(state, batch)
+            print(f"[{{phase}}] devices={{len(jax.devices())}} "
+                  f"step {{i}} loss {{float(m['loss']):.4f}}", flush=True)
+    if phase == "train8":
+        save_checkpoint(ckdir, start + n_steps, state)
+""")
+
+
+def run(phase: str, devices: int, ckdir: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env.setdefault("PYTHONPATH", "src")
+    code = INNER.format(ckdir=ckdir, phase=phase)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True)
+    sys.stdout.write(out.stdout)
+    if out.returncode != 0:
+        sys.stderr.write(out.stderr)
+        raise SystemExit(out.returncode)
+
+
+def main():
+    with tempfile.TemporaryDirectory() as ckdir:
+        print("== phase 1: FSDP+TP training on a 4x2 mesh (8 devices) ==")
+        run("train8", 8, ckdir)
+        print("== phase 2: preempted; elastic restore on a 2x1 mesh ==")
+        run("resume2", 2, ckdir)
+        print("OK — the job continued on 4x fewer devices from the same "
+              "checkpoint (UFA Restore-Later semantics)")
+
+
+if __name__ == "__main__":
+    main()

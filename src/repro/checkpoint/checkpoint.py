@@ -1,0 +1,151 @@
+"""Checkpoint/restore with elastic reshard-on-load.
+
+Format: one directory per step containing a msgpack-free, dependency-free
+layout — ``manifest.json`` (tree structure, shapes, dtypes) plus one ``.npy``
+-style raw buffer per leaf.  Arrays are written *unsharded* (gathered) with
+layout metadata, so a checkpoint saved from an N-device mesh restores onto
+any M-device mesh: the loader places each array with the target sharding
+(elastic scaling — UFA's BBM restore path uses exactly this to revive a
+preempted training job on whatever capacity the burst cluster offers).
+
+``AsyncCheckpointer`` double-buffers: device->host transfer happens on the
+caller thread (cheap), serialization + fsync on a background thread, so the
+training loop is not blocked by storage (the paper's MBB philosophy:
+overlap the slow path with useful work).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import struct
+import threading
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for kp, leaf in flat[0]:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        leaves.append((path, leaf))
+    return leaves, flat[1]
+
+
+def save_checkpoint(directory: str | Path, step: int, tree: Any,
+                    extra: Optional[Dict[str, Any]] = None) -> Path:
+    """Atomic (write-to-temp + rename) full checkpoint."""
+    directory = Path(directory)
+    final = directory / f"step_{step:010d}"
+    tmp = directory / f".tmp_step_{step:010d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves, _ = _flatten_with_paths(tree)
+    manifest = {"step": step, "extra": extra or {}, "leaves": []}
+    for i, (path, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.bin"
+        manifest["leaves"].append({
+            "path": path, "file": fname, "shape": list(arr.shape),
+            "dtype": str(arr.dtype)})
+        with open(tmp / fname, "wb") as f:
+            f.write(arr.tobytes())
+    with open(tmp / _MANIFEST, "w") as f:
+        json.dump(manifest, f)
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in directory.iterdir()
+             if p.name.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str | Path, like: Any,
+                    step: Optional[int] = None,
+                    shardings: Any = None) -> Tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of ``like``; if ``shardings`` (a matching
+    pytree of NamedSharding) is given, each array is placed with it —
+    reshard-on-load onto any mesh."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        assert step is not None, f"no checkpoints in {directory}"
+    d = directory / f"step_{step:010d}"
+    manifest = json.loads((d / _MANIFEST).read_text())
+    by_path = {m["path"]: m for m in manifest["leaves"]}
+
+    leaves, treedef = _flatten_with_paths(like)
+    shard_leaves = None
+    if shardings is not None:
+        shard_leaves = [s for _, s in _flatten_with_paths(shardings)[0]]
+
+    out = []
+    for i, (path, leaf) in enumerate(leaves):
+        m = by_path.get(path)
+        assert m is not None, f"checkpoint missing leaf {path}"
+        raw = (d / m["file"]).read_bytes()
+        arr = np.frombuffer(raw, dtype=np.dtype(m["dtype"])).reshape(m["shape"])
+        target_dtype = getattr(leaf, "dtype", arr.dtype)
+        arr = arr.astype(target_dtype, copy=False)
+        if shard_leaves is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]
+
+
+class AsyncCheckpointer:
+    """Double-buffered async writer: ``save()`` returns once the host copy
+    exists; serialization happens on a daemon thread.  ``wait()`` joins."""
+
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None):
+        self.wait()
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(p for p in self.directory.iterdir()
+                       if p.name.startswith("step_"))
+        for p in steps[:-self.keep]:
+            shutil.rmtree(p, ignore_errors=True)

@@ -1,0 +1,9 @@
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ArchSpec,
+    ShapeSpec,
+    all_archs,
+    get_arch,
+    input_specs,
+    register,
+)

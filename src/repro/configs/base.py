@@ -1,0 +1,127 @@
+"""Architecture registry: assigned architectures × input shapes.
+
+Each arch module defines ``CONFIG`` (exact assigned numbers), ``REDUCED``
+(same family, tiny, for CPU smoke tests) and registers itself here.
+``input_specs`` builds ShapeDtypeStruct stand-ins — weak-type-correct,
+shardable, no device allocation — for every (arch × shape) dry-run cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import LMConfig, init_decode_state
+from repro.core.tiers import Tier
+
+# ---------------------------------------------------------------------------
+# Shapes (assigned): all LM-family archs share these four shape cells.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                    # audio|dense|ssm|moe|vlm|hybrid
+    config: LMConfig
+    reduced: LMConfig
+    tier: Tier                     # business-criticality tier for UFA examples
+    source: str
+    # shape-name -> skip reason (None = runs)
+    skips: Dict[str, Optional[str]] = dataclasses.field(default_factory=dict)
+
+    def shape_runnable(self, shape: str) -> bool:
+        return self.skips.get(shape) is None
+
+
+_REGISTRY: Dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    _REGISTRY[spec.arch_id] = spec
+    return spec
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    _load_all()
+    return _REGISTRY[arch_id]
+
+
+def all_archs() -> Dict[str, ArchSpec]:
+    _load_all()
+    return dict(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    from repro.configs import (  # noqa: F401
+        musicgen_large, command_r_plus_104b, llama3_2_3b, gemma3_4b,
+        qwen3_1_7b, mamba2_780m, kimi_k2_1t_a32b, phi3_5_moe_42b_a6_6b,
+        internvl2_76b, hymba_1_5b)
+    _LOADED = True
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(arch: ArchSpec, shape_name: str,
+                activ_dtype: str = "bfloat16") -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for every model input of the given dry-run cell."""
+    cfg = arch.config
+    ss = SHAPES[shape_name]
+    B, S = ss.global_batch, ss.seq_len
+    if ss.kind == "train":
+        if cfg.embed_inputs:
+            inputs = _sds((B, S), jnp.int32)
+        else:
+            inputs = _sds((B, S, cfg.d_model), activ_dtype)
+        return {"inputs": inputs, "labels": _sds((B, S), jnp.int32)}
+    if ss.kind == "prefill":
+        if cfg.embed_inputs:
+            return {"inputs": _sds((B, S), jnp.int32)}
+        return {"inputs": _sds((B, S, cfg.d_model), activ_dtype)}
+    # decode: one new token against a KV cache of seq_len
+    from repro.dist.sharding import cache_seq_len
+    state = jax.eval_shape(
+        lambda: init_decode_state(cfg, B, cache_seq_len(S), jnp.bfloat16, length=S))
+    if cfg.embed_inputs:
+        tokens = _sds((B,), jnp.int32)
+    else:
+        tokens = _sds((B, cfg.d_model), activ_dtype)
+    return {"state": state, "tokens": tokens}
+
+
+FULL_ATTENTION_500K_SKIP = (
+    "long_500k skipped: pure full-attention architecture — published config "
+    "does not support 524k context (quadratic prefill, positional scheme); "
+    "see DESIGN.md §Arch-applicability.")

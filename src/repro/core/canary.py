@@ -1,0 +1,94 @@
+"""Canary regression gate (paper §6, third layer).
+
+Always-On / Active-Migrate deployments entering the canary zone get a
+5-minute window during which traffic to ALL Restore-Later/Terminate
+services is blocked; if the canary's error metrics regress, the deployment
+rolls back — a new fail-close dependency was about to ship.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.service import ServiceSpec
+from repro.core.tiers import FailureClass
+
+
+@dataclasses.dataclass
+class Deployment:
+    service: str
+    # newly introduced dependency (callee, fail_open) or None
+    new_dep: Optional[Tuple[str, bool]] = None
+
+
+@dataclasses.dataclass
+class GateResult:
+    deployment: Deployment
+    passed: bool
+    error_rate: float
+
+
+class CanaryRegressionGate:
+    """5-minute blackhole of preemptible callees + metric comparison."""
+
+    BASELINE_ERROR = 0.0008
+    REGRESSION_THRESHOLD = 0.004
+
+    def __init__(self, fleet: Dict[str, ServiceSpec], seed: int = 0):
+        self.fleet = fleet
+        self.rng = random.Random(seed)
+        self.rolled_back: List[Deployment] = []
+
+    def _canary_error_rate(self, dep: Deployment) -> float:
+        """Error rate observed while preemptible callees are blackholed."""
+        base = max(0.0, self.rng.gauss(self.BASELINE_ERROR, 0.0002))
+        spec = self.fleet.get(dep.service)
+        if spec is None:
+            return base
+        # existing unsafe deps toward preemptible callees surface here too
+        for callee in spec.unsafe_deps():
+            if self.fleet[callee].failure_class.preemptible:
+                base += 0.25
+        if dep.new_dep is not None:
+            callee, fail_open = dep.new_dep
+            c = self.fleet.get(callee)
+            if (c is not None and c.failure_class.preemptible
+                    and not fail_open):
+                base += self.rng.uniform(0.2, 0.6)  # hard failure under block
+        return min(1.0, base)
+
+    def evaluate(self, dep: Deployment) -> GateResult:
+        spec = self.fleet.get(dep.service)
+        if spec is None or not spec.failure_class.survives_failover:
+            return GateResult(dep, True, 0.0)  # gate targets critical classes
+        err = self._canary_error_rate(dep)
+        passed = err < self.REGRESSION_THRESHOLD
+        if not passed:
+            self.rolled_back.append(dep)
+        return GateResult(dep, passed, err)
+
+    def run_window(self, n_deployments: int, regression_rate: float = 6e-5
+                   ) -> Dict[str, object]:
+        """Simulate a deployment stream (paper: ~8,000/week, 3 regressions
+        caught in a 45-day window => ~4e-4 regression rate post-static)."""
+        names = [n for n, s in self.fleet.items()
+                 if s.failure_class.survives_failover]
+        preemptible = [n for n, s in self.fleet.items()
+                       if s.failure_class.preemptible]
+        caught = 0
+        shipped_bad = 0
+        for i in range(n_deployments):
+            svc = self.rng.choice(names)
+            new_dep = None
+            if preemptible and self.rng.random() < regression_rate:
+                new_dep = (self.rng.choice(preemptible), False)  # fail-close!
+            res = self.evaluate(Deployment(svc, new_dep))
+            if new_dep is not None:
+                if res.passed:
+                    shipped_bad += 1
+                else:
+                    caught += 1
+        return {"deployments": n_deployments, "regressions_caught": caught,
+                "regressions_shipped": shipped_bad}

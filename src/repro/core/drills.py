@@ -1,0 +1,133 @@
+"""Validation drills (paper §5): dependency-safety certification and UFA
+failover certification.
+
+Dependency safety: graduated traffic blackholing (0% -> 100%) toward
+Restore-Later/Terminate services; a critical service is certified only if
+its error rate stays at baseline under complete dependency isolation.
+
+Failover certification: runs the end-to-end OMG workflow at peak and
+non-peak and checks every class SLA.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.capacity import RegionCapacity
+from repro.core.omg import FailoverReport, Orchestrator
+from repro.core.service import ServiceSpec
+from repro.core.tiers import RTO_SECONDS, FailureClass
+
+
+BLACKHOLE_STEPS = (0.0, 0.1, 0.25, 0.5, 0.75, 1.0)
+
+
+@dataclasses.dataclass
+class CertResult:
+    service: str
+    certified: bool
+    failing_deps: List[str]
+    max_error_rate: float
+
+
+def _error_rate_under_blackhole(spec: ServiceSpec,
+                                fleet: Dict[str, ServiceSpec],
+                                fraction: float, rng: random.Random,
+                                baseline: float = 0.0003) -> float:
+    """Caller error rate when `fraction` of traffic to preemptible callees
+    is blackholed: fail-open deps degrade gracefully; fail-close propagate."""
+    err = max(0.0, rng.gauss(baseline, 1e-4))
+    for callee in spec.deps:
+        c = fleet.get(callee)
+        if c is None or not c.failure_class.preemptible:
+            continue
+        if not spec.fail_open.get(callee, True):
+            err += fraction * 0.9      # hard failure propagates
+    return min(1.0, err)
+
+
+def dependency_safety_certification(fleet: Dict[str, ServiceSpec],
+                                    seed: int = 0,
+                                    error_budget: float = 0.002
+                                    ) -> Dict[str, CertResult]:
+    """Graduated blackholing for every critical service."""
+    rng = random.Random(seed)
+    results: Dict[str, CertResult] = {}
+    for name, spec in fleet.items():
+        if not spec.failure_class.survives_failover:
+            continue
+        worst = 0.0
+        for frac in BLACKHOLE_STEPS:
+            worst = max(worst,
+                        _error_rate_under_blackhole(spec, fleet, frac, rng))
+            if worst > error_budget:
+                break  # abort the drill early, exactly like production
+        failing = [d for d in spec.unsafe_deps()
+                   if fleet.get(d) is not None
+                   and fleet[d].failure_class.preemptible]
+        results[name] = CertResult(service=name,
+                                   certified=worst <= error_budget,
+                                   failing_deps=failing,
+                                   max_error_rate=worst)
+    return results
+
+
+def remediate(fleet: Dict[str, ServiceSpec],
+              edges: Set[Tuple[str, str]],
+              strategy: str = "fail_open") -> int:
+    """Apply the paper's remediation strategies to detected unsafe edges:
+    code-level fail-open conversion (default), or up-tiering the callee."""
+    n = 0
+    for caller, callee in edges:
+        spec = fleet.get(caller)
+        if spec is None or callee not in spec.fail_open:
+            continue
+        if spec.fail_open[callee]:
+            continue
+        if strategy == "fail_open":
+            spec.fail_open[callee] = True
+        elif strategy == "up_tier":
+            target = fleet[callee]
+            target.failure_class = FailureClass.ACTIVE_MIGRATE
+        n += 1
+    return n
+
+
+@dataclasses.dataclass
+class FailoverCertification:
+    peak_report: FailoverReport
+    classes_ok: Dict[str, bool]
+    availability_ok: bool
+    certified: bool
+
+
+def failover_certification(fleet: Dict[str, ServiceSpec],
+                           scale: float = 1.0,
+                           overcommit_factor: float = 1.5
+                           ) -> FailoverCertification:
+    """End-to-end drill: full-peak failover with all cities moved."""
+    region = RegionCapacity.for_fleet("drill-region", fleet,
+                                      overcommit_factor=overcommit_factor)
+    orch = Orchestrator(fleet, region, scale=scale)
+    rep = orch.failover(tv_failover=1.0)   # full peak
+    classes_ok = {
+        "always_on": rep.always_on_ok,
+        "active_migrate": (rep.am_migrated_at_s or 1e18) <= 30 * 60,
+        "restore_later": rep.rl_rto_met,
+        "burst_under_20min": (rep.burst_full_at_s or 1e18) <= 20 * 60,
+    }
+    # availability: critical services must not depend fail-close on anything
+    # that was preempted
+    unsafe_hit = [
+        (s.name, d) for s in fleet.values()
+        if s.failure_class.survives_failover
+        for d in s.unsafe_deps()
+        if fleet.get(d) is not None and fleet[d].failure_class.preemptible]
+    availability_ok = not unsafe_hit and rep.always_on_ok
+    orch.failback()
+    return FailoverCertification(
+        peak_report=rep, classes_ok=classes_ok,
+        availability_ok=availability_ok,
+        certified=availability_ok and all(classes_ok.values()))

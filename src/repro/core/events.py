@@ -1,0 +1,42 @@
+"""Minimal deterministic discrete-event simulation kernel.
+
+OMG orchestration, drills and the failover benchmarks all run on this: a
+priority queue of (time, seq, fn) with a monotonically advancing clock.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, List, Optional, Tuple
+
+
+class EventLoop:
+    def __init__(self):
+        self._q: List[Tuple[float, int, Callable]] = []
+        self._seq = itertools.count()
+        self.now: float = 0.0
+        self._trace: List[Tuple[float, str]] = []
+
+    def schedule(self, delay: float, fn: Callable, label: str = ""):
+        assert delay >= 0, delay
+        heapq.heappush(self._q, (self.now + delay, next(self._seq), fn, label))
+
+    def log(self, msg: str):
+        self._trace.append((self.now, msg))
+
+    @property
+    def trace(self):
+        return list(self._trace)
+
+    def run(self, until: Optional[float] = None, max_events: int = 10_000_000):
+        n = 0
+        while self._q and n < max_events:
+            t, _, fn, label = heapq.heappop(self._q)
+            if until is not None and t > until:
+                heapq.heappush(self._q, (t, next(self._seq), fn, label))
+                break
+            self.now = max(self.now, t)
+            fn()
+            n += 1
+        return n

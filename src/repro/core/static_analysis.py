@@ -1,0 +1,143 @@
+"""Static fail-close analysis over a service IR (paper §6, second layer).
+
+The paper's tool traces call paths across Go/Java codebases to decide
+whether a downstream RPC error can propagate to the caller's response.  We
+model a service's code as a small IR: functions containing *statements*;
+an RPC callsite either PROPAGATES the error to its caller (Go: ``if err !=
+nil { return err }`` / Java: unhandled throw), HANDLES it (fallback,
+default, log-and-continue), or WRAPS it into a degraded-but-successful
+response.  The analyzer walks the intra-service call graph from each
+handler entrypoint and classifies every reachable RPC edge.
+
+IR synthesis plants the fleet's ground-truth edge behavior, including the
+cold-path defects that runtime analysis misses (they're still visible to
+whole-program analysis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import random
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.service import ServiceSpec
+
+
+class ErrBehavior(enum.Enum):
+    PROPAGATE = "propagate"   # fail-close at this site
+    HANDLE = "handle"         # fail-open: swallowed/fallback
+    WRAP_DEGRADED = "wrap"    # fail-open: degraded success
+
+
+@dataclasses.dataclass
+class Statement:
+    kind: str                         # "rpc" | "call"
+    target: str                       # callee service (rpc) or function (call)
+    on_error: ErrBehavior = ErrBehavior.HANDLE
+
+
+@dataclasses.dataclass
+class Function:
+    name: str
+    body: List[Statement] = dataclasses.field(default_factory=list)
+    # does this function propagate errors returned by its callees upward?
+    propagates_callee_errors: bool = True
+
+
+@dataclasses.dataclass
+class ServiceIR:
+    service: str
+    entrypoints: List[str] = dataclasses.field(default_factory=list)
+    functions: Dict[str, Function] = dataclasses.field(default_factory=dict)
+
+
+def synthesize_ir(fleet: Dict[str, ServiceSpec], seed: int = 0,
+                  max_depth: int = 3) -> Dict[str, ServiceIR]:
+    """Builds an IR per service whose RPC error behavior realizes the
+    fleet's planted fail_open/fail_close ground truth, burying some sites
+    behind helper-function indirection (so naive per-function scans miss
+    them but the whole-service walk does not)."""
+    rng = random.Random(seed)
+    irs: Dict[str, ServiceIR] = {}
+    for name, spec in fleet.items():
+        ir = ServiceIR(service=name)
+        handler = Function(f"{name}.Handle", propagates_callee_errors=True)
+        ir.functions[handler.name] = handler
+        ir.entrypoints.append(handler.name)
+        for i, dep in enumerate(spec.deps):
+            fail_open = spec.fail_open.get(dep, True)
+            behavior = (ErrBehavior.HANDLE if fail_open
+                        else ErrBehavior.PROPAGATE)
+            if fail_open and rng.random() < 0.3:
+                behavior = ErrBehavior.WRAP_DEGRADED
+            depth = rng.randint(0, max_depth)
+            parent = handler
+            for d in range(depth):
+                helper = Function(f"{name}.helper_{i}_{d}",
+                                  propagates_callee_errors=True)
+                ir.functions[helper.name] = helper
+                parent.body.append(Statement("call", helper.name))
+                parent = helper
+            parent.body.append(Statement("rpc", dep, on_error=behavior))
+        irs[name] = ir
+    return irs
+
+
+class StaticFailCloseAnalyzer:
+    """Whole-service walk: an RPC edge is fail-close iff some path from an
+    entrypoint reaches the callsite AND the error propagates through every
+    frame back to the entrypoint's response."""
+
+    def analyze_service(self, ir: ServiceIR) -> Dict[str, bool]:
+        verdicts: Dict[str, bool] = {}   # callee -> fail_close?
+
+        def walk(fn_name: str, frames_propagate: bool, depth: int = 0,
+                 seen: Optional[Set[str]] = None):
+            seen = seen or set()
+            if fn_name in seen or depth > 32:
+                return
+            seen = seen | {fn_name}
+            fn = ir.functions.get(fn_name)
+            if fn is None:
+                return
+            for st in fn.body:
+                if st.kind == "rpc":
+                    closes = (st.on_error == ErrBehavior.PROPAGATE
+                              and frames_propagate)
+                    verdicts[st.target] = verdicts.get(st.target, False) or closes
+                else:
+                    callee = ir.functions.get(st.target)
+                    prop = frames_propagate and (
+                        callee.propagates_callee_errors if callee else True)
+                    walk(st.target, prop, depth + 1, seen)
+
+        for ep in ir.entrypoints:
+            walk(ep, True)
+        return verdicts
+
+    def analyze_fleet(self, irs: Dict[str, ServiceIR]
+                      ) -> Set[Tuple[str, str]]:
+        out: Set[Tuple[str, str]] = set()
+        for name, ir in irs.items():
+            for callee, closes in self.analyze_service(ir).items():
+                if closes:
+                    out.add((name, callee))
+        return out
+
+
+def static_analysis(fleet: Dict[str, ServiceSpec], seed: int = 0
+                    ) -> Dict[str, object]:
+    irs = synthesize_ir(fleet, seed)
+    found = StaticFailCloseAnalyzer().analyze_fleet(irs)
+    truth = {(s.name, d) for s in fleet.values() for d in s.unsafe_deps()}
+    tp = found & truth
+    return {
+        "found": found,
+        "truth": truth,
+        "true_positives": len(tp),
+        "false_positives": len(found - truth),
+        "missed": len(truth - found),
+        "precision": len(tp) / max(1, len(found)),
+        "recall": len(tp) / max(1, len(truth)),
+    }

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (  # noqa: F401
+    SyntheticLMDataset,
+    make_train_iterator,
+)

@@ -1,0 +1,78 @@
+"""Deterministic synthetic-token data pipeline.
+
+Markov-chain token streams (stable bigram structure so small models show a
+real, decreasing loss) generated on the fly from a counter-based PRNG:
+batch N is a pure function of (seed, N), so any worker/restart resumes
+exactly — the property UFA's preempt-and-restore path (BBM) relies on: a
+training job revived in burst capacity continues from (checkpoint step + 1)
+with bit-identical data order.  Sharded hosts slice the global batch by
+process index.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLMDataset:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_clusters: int = 16      # latent "topics" giving learnable structure
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        V, C = self.vocab_size, self.n_clusters
+        # each cluster prefers a band of tokens; transitions are sticky
+        self.cluster_of = rng.integers(0, C, size=V)
+        self.trans = rng.dirichlet(np.ones(C) * 0.3, size=C)
+        self.band = [np.flatnonzero(self.cluster_of == c) for c in range(C)]
+        for c in range(C):
+            if len(self.band[c]) == 0:
+                self.band[c] = np.array([c % V])
+
+    def batch(self, index: int) -> Dict[str, np.ndarray]:
+        """Batch `index`, deterministically (counter-based)."""
+        rng = np.random.default_rng((self.seed << 20) ^ index)
+        B, S, C = self.global_batch, self.seq_len, self.n_clusters
+        clusters = np.empty((B, S), np.int64)
+        clusters[:, 0] = rng.integers(0, C, size=B)
+        u = rng.random((B, S))
+        cum = np.cumsum(self.trans, axis=1)
+        for t in range(1, S):
+            clusters[:, t] = (u[:, t, None] <
+                              cum[clusters[:, t - 1]]).argmax(axis=1)
+        pick = rng.integers(0, 1 << 30, size=(B, S))
+        tokens = np.empty((B, S), np.int32)
+        for c in range(C):
+            m = clusters == c
+            tokens[m] = self.band[c][pick[m] % len(self.band[c])]
+        inputs = tokens[:, :-1] if S > 1 else tokens
+        labels = tokens[:, 1:] if S > 1 else tokens
+        # pad back to S with a wrap token so shapes stay (B, S)
+        inputs = np.concatenate([tokens[:, :1], inputs], axis=1)[:, :S]
+        labels = tokens
+        return {"inputs": inputs.astype(np.int32),
+                "labels": labels.astype(np.int32)}
+
+
+def make_train_iterator(ds: SyntheticLMDataset, start_step: int = 0,
+                        shardings: Optional[Dict] = None
+                        ) -> Iterator[Dict[str, jnp.ndarray]]:
+    """Resumable iterator: step N always yields the same batch."""
+    step = start_step
+    while True:
+        b = ds.batch(step)
+        if shardings:
+            b = {k: jax.device_put(v, shardings[k]) for k, v in b.items()}
+        else:
+            b = {k: jnp.asarray(v) for k, v in b.items()}
+        yield b
+        step += 1

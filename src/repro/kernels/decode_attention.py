@@ -1,0 +1,108 @@
+"""Split-K decode attention Pallas TPU kernel (FlashDecoding-style).
+
+One new query token per sequence attends to a long KV cache.  Grid
+(B, KV_heads, n_k_blocks): each step loads one (block_k, d) cache tile and
+folds it into fp32 running max / denominator / accumulator scratch for the
+GQA query group of that KV head.  ``length`` (valid cache entries) and
+``window`` arrive as scalar-prefetch operands in SMEM.
+
+On-chip working set per step: ~2 * block_k * d * 2B (K and V tiles), MXU
+dims (group x d) x (d x block_k) — d is 64..256 across the assigned archs,
+block_k defaults to 512 lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, block_k: int, n_k: int,
+                   scale: float, group: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    window = win_ref[0]
+    k_start = ki * block_k
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale           # (g, d)
+        k = k_ref[0, 0].astype(jnp.float32)                   # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (g, bk)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (group, block_k), 1)
+        valid = k_pos < length
+        valid = jnp.logical_and(
+            valid, jnp.where(window > 0, (length - 1 - k_pos) < window, True))
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     length, window=0, *, scale: float | None = None,
+                     block_k: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, d); caches: (B, KV, K, d).  Returns (B, H, d)."""
+    B, H, d = q.shape
+    KV, K = k_cache.shape[1], k_cache.shape[2]
+    group = H // KV
+    block_k = min(block_k, K)
+    assert K % block_k == 0, (K, block_k)
+    n_k = K // block_k
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    qg = q.reshape(B, KV, group, d)
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+    window = jnp.asarray(window, jnp.int32).reshape(1)
+
+    kern = functools.partial(_decode_kernel, block_k=block_k, n_k=n_k,
+                             scale=scale, group=group)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d), lambda b, n, ki, *_: (b, n, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, n, ki, *_: (b, n, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, n, ki, *_: (b, n, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d), lambda b, n, ki, *_: (b, n, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, group, d), q.dtype),
+        interpret=interpret,
+    )(length, window, qg, k_cache, v_cache)
+    return out.reshape(B, H, d)

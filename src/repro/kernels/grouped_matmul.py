@@ -1,0 +1,61 @@
+"""Grouped (per-expert) matmul Pallas TPU kernel for MoE expert FFNs.
+
+x (E, C, D) @ w (E, D, F) -> (E, C, F): grid (E, C/bc, F/bf, D/bd) with an
+fp32 VMEM accumulator across the contraction (bd) dimension (innermost, so
+the sequential TPU grid keeps the accumulator live).  MXU-aligned 128x128
+output tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_scr, *, n_d: int):
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0].astype(jnp.float32)       # (bc, bd)
+    w = w_ref[0].astype(jnp.float32)       # (bd, bf)
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(di == n_d - 1)
+    def _emit():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+def grouped_matmul(x: jnp.ndarray, w: jnp.ndarray, *, block_c: int = 128,
+                   block_f: int = 128, block_d: int = 512,
+                   interpret: bool = False) -> jnp.ndarray:
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F)."""
+    E, C, D = x.shape
+    _, _, F = w.shape
+    block_c = min(block_c, C)
+    block_f = min(block_f, F)
+    block_d = min(block_d, D)
+    assert C % block_c == 0 and F % block_f == 0 and D % block_d == 0
+    n_c, n_f, n_d = C // block_c, F // block_f, D // block_d
+
+    kern = functools.partial(_gmm_kernel, n_d=n_d)
+    return pl.pallas_call(
+        kern,
+        grid=(E, n_c, n_f, n_d),
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d), lambda e, ci, fi, di: (e, ci, di)),
+            pl.BlockSpec((1, block_d, block_f), lambda e, ci, fi, di: (e, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda e, ci, fi, di: (e, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

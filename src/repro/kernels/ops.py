@@ -1,0 +1,80 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU, so
+the same call sites work in tests and production.  Layout plumbing between
+the model's (B, S, H, d) convention and the kernels' blocked layouts lives
+here, not in the model.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import grouped_matmul as _gmm
+from repro.kernels import rmsnorm as _rms
+from repro.kernels import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret: Optional[bool] = None):
+    """q/k/v: (B, S, H, d) with KV already repeated to H heads."""
+    interpret = _default_interpret() if interpret is None else interpret
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                              block_q=block_q, block_k=block_k,
+                              interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, length, window=0, *, block_k=512,
+                     interpret: Optional[bool] = None):
+    """q: (B, H, d); caches: (B, K, KV, d) (model layout; transposed here)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    kc = k_cache.transpose(0, 2, 1, 3)   # (B, KV, K, d)
+    vc = v_cache.transpose(0, 2, 1, 3)
+    return _dec.decode_attention(q, kc, vc, length, window,
+                                 block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, b, c, chunk=128, *, interpret: Optional[bool] = None):
+    """x: (B,S,H,P); dt: (B,S,H); a: (H,); b/c: (B,S,G,N) (groups expanded)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    H = x.shape[2]
+    G = b.shape[2]
+    if G != H:
+        rep = H // G
+        b = jnp.repeat(b, rep, axis=2)
+        c = jnp.repeat(c, rep, axis=2)
+    return _ssd.ssd_scan(x, dt, a, b, c, chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d",
+                                             "interpret"))
+def grouped_matmul(x, w, *, block_c=128, block_f=128, block_d=512,
+                   interpret: Optional[bool] = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _gmm.grouped_matmul(x, w, block_c=block_c, block_f=block_f,
+                               block_d=block_d, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_r", "interpret"))
+def rmsnorm(x, scale, eps=1e-6, *, block_r=256,
+            interpret: Optional[bool] = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _rms.rmsnorm(x, scale, eps, block_r=block_r, interpret=interpret)

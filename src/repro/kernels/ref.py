@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each ``ref_*`` mirrors its kernel's contract exactly; kernel tests sweep
+shapes/dtypes and assert allclose against these.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def ref_flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True, window: int = 0,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, S, H, d); k/v: (B, S, H, d) (KV already repeated to H heads).
+    window: 0 = global; >0 = sliding window (causal)."""
+    B, S, H, d = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bshd,bkhd->bhsk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = k_pos <= q_pos
+    if window > 0:
+        mask = mask & ((q_pos - k_pos) < window)
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhsk,bkhd->bshd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray, length: int,
+                         *, window: int = 0,
+                         scale: Optional[float] = None) -> jnp.ndarray:
+    """One-token GQA decode. q: (B, H, d); caches: (B, K, KV, d);
+    attends to positions < length (+window clipping)."""
+    B, H, d = q.shape
+    K, KV = k_cache.shape[1], k_cache.shape[2]
+    g = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(B, KV, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bngd,bknd->bngk", qg, k_cache.astype(jnp.float32)) * scale
+    k_pos = jnp.arange(K)
+    valid = k_pos < length
+    if window > 0:
+        valid = valid & ((length - 1 - k_pos) < window)
+    scores = jnp.where(valid[None, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngk,bknd->bngd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, d).astype(q.dtype)
+
+
+def ref_grouped_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Per-expert GEMM: x (E, C, D) @ w (E, D, F) -> (E, C, F)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def ref_ssd_chunk(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                  b: jnp.ndarray, c: jnp.ndarray,
+                  init_state: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-chunk SSD: the intra-chunk + state update computed by one grid
+    step of the Pallas kernel.  x: (B, c, H, P); dt: (B, c, H); a: (H,);
+    b, c: (B, c, H, N) (already head-expanded);
+    init_state: (B, H, P, N).  Returns (y (B,c,H,P), out_state (B,H,P,N))."""
+    B, L, H, Pd = x.shape
+    N = b.shape[-1]
+    x32 = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    da = dt.astype(jnp.float32) * a  # (B, c, H)
+    da_h = da.transpose(0, 2, 1)     # (B, H, c)
+    cs = jnp.cumsum(da_h, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    L_mat = jnp.where(jnp.tril(jnp.ones((L, L), bool)), jnp.exp(diff), 0.0)
+    y = jnp.einsum("bihn,bjhn,bhij,bjhp->bihp",
+                   c.astype(jnp.float32), b.astype(jnp.float32), L_mat, x32)
+    if init_state is not None:
+        state_decay = jnp.exp(cs)    # (B,H,c)
+        y = y + jnp.einsum("bchn,bhpn,bhc->bchp",
+                           c.astype(jnp.float32),
+                           init_state.astype(jnp.float32), state_decay)
+    decay_states = jnp.exp(cs[..., -1:] - cs)
+    new_state = jnp.einsum("bchn,bhc,bchp->bhpn",
+                           b.astype(jnp.float32), decay_states, x32)
+    if init_state is not None:
+        new_state = new_state + init_state.astype(jnp.float32) * \
+            jnp.exp(cs[..., -1])[..., None, None]
+    return y.astype(x.dtype), new_state

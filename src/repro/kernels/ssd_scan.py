@@ -1,0 +1,102 @@
+"""Mamba-2 SSD chunked-scan Pallas TPU kernel.
+
+Grid (B, H, n_chunks): the TPU grid runs the chunk dimension innermost and
+sequentially, so the (P, N) recurrent state lives in fp32 VMEM scratch and
+is carried across chunk iterations — the inter-chunk recurrence costs no
+HBM traffic.  Per step the kernel computes, entirely on-chip:
+
+  cs   = cumsum(dt*a)               (via lower-triangular matmul -> MXU)
+  L    = tril(exp(cs_i - cs_j))     (chunk x chunk decay)
+  y    = (C B^T ⊙ L) (dt⊙x)  +  C state^T ⊙ exp(cs)     (intra + carry-in)
+  state= state * exp(cs_last) + (dt⊙x)^T (B ⊙ exp(cs_last - cs))
+
+Working set for (chunk=256, P=64, N=128): ~1 MB — comfortably VMEM-resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref, state_scr,
+                *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (c, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (c,)
+    a = a_ref[0]                                     # ()
+    b = b_ref[0, :, 0, :].astype(jnp.float32)        # (c, N)
+    c = c_ref[0, :, 0, :].astype(jnp.float32)        # (c, N)
+
+    xw = x * dt[:, None]
+    da = (dt * a)[:, None]                           # (c, 1)
+    tril = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+    cs = jax.lax.dot_general(tril, da, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (c,1) cumsum
+    diff = cs - cs.T                                 # (c, c): cs_i - cs_j
+    L = jnp.where(tril > 0, jnp.exp(diff), 0.0)
+
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (c, c)
+    y = jax.lax.dot_general(cb * L, xw, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (c, P)
+    # carry-in from previous chunks' state: (c,N)@(N,P) scaled by exp(cs)
+    state = state_scr[...]                           # (P, N)
+    y_off = jax.lax.dot_general(c, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y = y + y_off * jnp.exp(cs)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update
+    decay = jnp.exp(cs[-1, 0] - cs)                  # (c, 1)
+    bd = b * decay
+    s_new = jax.lax.dot_general(xw, bd, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (P, N)
+    state_scr[...] = state * jnp.exp(cs[-1, 0]) + s_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        s_ref[0, 0] = state_scr[...].astype(s_ref.dtype)
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+             c: jnp.ndarray, chunk: int = 128, *, interpret: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); a: (H,); b/c: (B,S,H,N) (head-expanded).
+    Returns (y (B,S,H,P) fp32-accurate, final_state (B,H,P,N) fp32)."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    kern = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=nc)
+    y, state = pl.pallas_call(
+        kern,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda bi, h, ci: (bi, ci, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, h, ci: (bi, ci, h)),
+            pl.BlockSpec((1,), lambda bi, h, ci: (h,)),
+            pl.BlockSpec((1, chunk, 1, N), lambda bi, h, ci: (bi, ci, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda bi, h, ci: (bi, ci, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda bi, h, ci: (bi, ci, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bi, h, ci: (bi, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)
+    return y, state

@@ -1,0 +1,399 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves the distribution config is coherent without real
+hardware: jax.jit(step).lower(**input_specs).compile() must succeed on the
+single-pod 16×16 mesh and the 2×16×16 multi-pod mesh, and we record
+memory_analysis / cost_analysis / collective traffic for the roofline.
+
+Cost-accounting note: XLA's cost_analysis counts while-loop (lax.scan)
+bodies ONCE, so scan-over-layers programs under-report FLOPs/bytes and the
+HLO text shows per-layer collectives once.  We therefore run a two-point
+probe per cell: the same step is re-lowered with n_layers=1 and n_layers=2
+fully UNROLLED; (C2 - C1) isolates one layer's exact cost (including its
+optimizer update and collectives) and corrected = C1 + (L-1)*(C2 - C1).
+Raw and corrected numbers are both recorded.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+Artifacts: artifacts/dryrun/{arch}__{shape}__{mesh}.json (skip if exists,
+--force to redo).
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, all_archs, get_arch, input_specs
+from repro.configs.base import ArchSpec
+from repro.dist import sharding as shd
+from repro.dist.ctx import sharding_rules
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import MoEParallel, init_params
+from repro.optim import make_optimizer
+from repro.train import (make_decode_fn, make_prefill_step,
+                         make_train_state_abstract, make_train_step)
+from repro.train.train_step import TrainState
+
+ART_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _mem_analysis_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend without memory analysis
+        return {"error": repr(e)}
+    if ma is None:
+        return {"error": "None"}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        try:
+            out[attr] = int(getattr(ma, attr))
+        except Exception:
+            pass
+    return out
+
+
+def _cost_analysis_dict(compiled):
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:
+        return {"error": repr(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    out = {}
+    for k, v in dict(ca).items():
+        if isinstance(v, (int, float)) and "{" not in k:
+            out[k] = float(v)
+    return out
+
+
+def _with_rules(fn, mesh, rules=None):
+    """Activate the logical-axis sharding context during tracing."""
+    def wrapped(*a, **k):
+        with sharding_rules(mesh, rules):
+            return fn(*a, **k)
+    return wrapped
+
+
+VARIANT_KEYS = ("remat", "fsdp", "block_local", "seq_parallel", "ssm_chunk")
+
+
+def apply_variant(arch: ArchSpec, variant: dict) -> ArchSpec:
+    """Variant knobs for perf iterations (EXPERIMENTS.md §Perf)."""
+    cfg = arch.config
+    if "remat" in variant:
+        cfg = dataclasses.replace(cfg, remat=str(variant["remat"]))
+    if variant.get("block_local"):
+        cfg = dataclasses.replace(cfg, block_local_attn=True)
+    if variant.get("seq_parallel"):
+        cfg = dataclasses.replace(cfg, seq_parallel_attn=True)
+    if variant.get("ssm_chunk"):
+        cfg = dataclasses.replace(cfg, ssm_chunk=int(variant["ssm_chunk"]))
+    if variant.get("kv_quant"):
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    if variant.get("pad_heads"):
+        # pad q AND kv heads proportionally to a TP-divisible count (zero
+        # weights for padded heads keep the math exact; see
+        # tests/test_models.py::test_padded_heads_are_exact)
+        ph = int(variant["pad_heads"])
+        kv = max(1, ph * cfg.n_kv_heads // max(1, cfg.n_heads))
+        cfg = dataclasses.replace(cfg, n_heads=ph, n_kv_heads=kv)
+    return dataclasses.replace(arch, config=cfg)
+
+
+def build_cell(arch: ArchSpec, shape_name: str, mesh, variant: dict = None):
+    """Returns (fn, args_abstract, in_shardings, donate_argnums, out_shd)."""
+    variant = variant or {}
+    arch = apply_variant(arch, variant)
+    cfg = arch.config
+    ss = SHAPES[shape_name]
+    specs = input_specs(arch, shape_name)
+    fsdp = bool(int(variant.get("fsdp", 1)))
+
+    moe_par = None
+    if cfg.is_moe:
+        moe_par = MoEParallel(mode="shard_map", model_axis="model",
+                              fsdp_axes=(shd.batch_axes(mesh) if fsdp else ()),
+                              mesh=mesh)
+
+    ps = shd.param_shardings(cfg, mesh, fsdp=fsdp)
+
+    if ss.kind == "train":
+        opt = make_optimizer(state_dtype=cfg.param_dtype)
+        step, _ = make_train_step(cfg, opt, moe_parallel=moe_par)
+        state_abs = make_train_state_abstract(cfg, opt)
+        state_shd = TrainState(params=ps,
+                               opt=type(state_abs.opt)(
+                                   step=shd.replicated(mesh), m=ps, v=ps),
+                               step=shd.replicated(mesh))
+        bs = shd.train_batch_shardings(cfg, mesh)
+        args = (state_abs, {"inputs": specs["inputs"], "labels": specs["labels"]})
+        metrics_shd = {k: shd.replicated(mesh)
+                       for k in ("loss", "ce", "aux", "grad_norm", "lr")}
+        return (_with_rules(step, mesh), args, (state_shd, bs), (0,),
+                (state_shd, metrics_shd))
+
+    if ss.kind == "prefill":
+        fn = make_prefill_step(cfg, moe_parallel=moe_par)
+        params_abs = jax.eval_shape(lambda k: init_params(cfg, k),
+                                    jax.random.PRNGKey(0))
+        args = (params_abs, specs["inputs"])
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        nb = 1
+        for a in shd.batch_axes(mesh):
+            nb *= mesh.shape[a]
+        baxes = shd.batch_axes(mesh) if SHAPES[shape_name].global_batch % nb == 0 else None
+        vax = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+        logits_shd = NamedSharding(mesh, P(baxes, vax))
+        return (_with_rules(fn, mesh), args,
+                (ps, shd.prefill_shardings(cfg, mesh)["inputs"]), (),
+                logits_shd)
+
+    # decode
+    fn = make_decode_fn(cfg)
+    params_abs = jax.eval_shape(lambda k: init_params(cfg, k),
+                                jax.random.PRNGKey(0))
+    st_shd = shd.decode_state_shardings(cfg, mesh, ss.global_batch)
+    tok_shd = shd.decode_token_shardings(cfg, mesh, ss.global_batch)
+    args = (params_abs, specs["state"], specs["tokens"])
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    nb = 1
+    for a in shd.batch_axes(mesh):
+        nb *= mesh.shape[a]
+    baxes = shd.batch_axes(mesh) if ss.global_batch % nb == 0 else None
+    vax = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+    logits_shd = NamedSharding(mesh, P(baxes, vax))
+    return (_with_rules(fn, mesh), args, (ps, st_shd, tok_shd), (1,),
+            (logits_shd, st_shd))
+
+
+def _compile_cell(arch: ArchSpec, shape_name: str, mesh, variant: dict = None):
+    fn, args, in_shd, donate, out_shd = build_cell(arch, shape_name, mesh, variant)
+    with mesh:
+        jfn = jax.jit(fn, in_shardings=in_shd, out_shardings=out_shd,
+                      donate_argnums=donate)
+        lowered = jfn.lower(*args)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+_PROBE_KEYS = ("flops", "transcendentals", "bytes accessed")
+
+
+def _probe(arch: ArchSpec, shape_name: str, mesh, n_layers: int,
+           variant: dict = None, window: int = None):
+    """Compile an unrolled n_layers variant; return cost + collective dict.
+    ``window`` overrides the per-layer window (None = arch default)."""
+    cfg_p = dataclasses.replace(arch.config, n_layers=n_layers,
+                                unroll_layers=True)
+    if window is not None:
+        cfg_p = dataclasses.replace(cfg_p, window_pattern=(window,))
+    elif cfg_p.window_pattern:
+        cfg_p = dataclasses.replace(
+            cfg_p, window_pattern=tuple(arch.config.window_pattern[:n_layers]) or (0,))
+    arch_p = dataclasses.replace(arch, config=cfg_p)
+    _, compiled = _compile_cell(arch_p, shape_name, mesh, variant)
+    ca = _cost_analysis_dict(compiled)
+    coll = hlo_analysis.parse_collectives(compiled.as_text())
+    return ca, coll
+
+
+def _mix(c1, c2, weight_body: float):
+    """outside + weight_body * (c2 - c1) for cost dicts."""
+    out = {}
+    for k in _PROBE_KEYS:
+        a, b = c1.get(k, 0.0), c2.get(k, 0.0)
+        out[k] = a + weight_body * max(0.0, b - a)
+    return out
+
+
+def _mix_coll(coll1, coll2, weight_body: float):
+    out = {}
+    for kind in set(coll1) | set(coll2):
+        c1 = coll1.get(kind, {"count": 0, "bytes": 0.0, "wire_bytes": 0.0})
+        c2 = coll2.get(kind, {"count": 0, "bytes": 0.0, "wire_bytes": 0.0})
+        out[kind] = {f: c1[f] + weight_body * max(0.0, c2[f] - c1[f])
+                     for f in c1}
+    return out
+
+
+def _add_cost(a, b):
+    return {k: a.get(k, 0.0) + b.get(k, 0.0) for k in set(a) | set(b)}
+
+
+def corrected_costs(arch: ArchSpec, shape_name: str, mesh,
+                    variant: dict = None):
+    """Two-point probe: corrected = C1 + (L-1)*(C2-C1).  For mixed
+    local/global window patterns the per-layer body is probed separately for
+    each layer type and mixed by the pattern's counts."""
+    import numpy as _np
+    cfg = arch.config
+    L = cfg.n_layers
+    windows = list(_np.asarray(cfg.layer_windows()))
+    n_local = sum(1 for w in windows if w > 0)
+    n_global = L - n_local
+    if 0 < n_local and 0 < n_global:
+        w_local = max(w for w in windows if w > 0)
+        ca1l, co1l = _probe(arch, shape_name, mesh, 1, variant, window=int(w_local))
+        ca2l, co2l = _probe(arch, shape_name, mesh, 2, variant, window=int(w_local))
+        ca1g, co1g = _probe(arch, shape_name, mesh, 1, variant, window=0)
+        ca2g, co2g = _probe(arch, shape_name, mesh, 2, variant, window=0)
+        # outside = C1g - body_g ; total = outside + n_l*body_l + n_g*body_g
+        cost = _mix(ca1g, ca2g, n_global - 1.0)            # outside + n_g*body_g
+        cost = _add_cost(cost, _mix({k: 0.0 for k in _PROBE_KEYS},
+                                    {k: max(0.0, ca2l.get(k, 0.0) - ca1l.get(k, 0.0))
+                                     for k in _PROBE_KEYS}, n_local))
+        coll = _mix_coll(co1g, co2g, n_global - 1.0)
+        body_l = _mix_coll({}, {k: {f: max(0.0, co2l.get(k, {}).get(f, 0.0)
+                                           - co1l.get(k, {}).get(f, 0.0))
+                                    for f in ("count", "bytes", "wire_bytes")}
+                                for k in set(co1l) | set(co2l)}, n_local)
+        for kind, v in body_l.items():
+            if kind in coll:
+                coll[kind] = {f: coll[kind][f] + v[f] for f in v}
+            else:
+                coll[kind] = v
+    else:
+        ca1, coll1 = _probe(arch, shape_name, mesh, 1, variant)
+        ca2, coll2 = _probe(arch, shape_name, mesh, 2, variant)
+        cost = _mix(ca1, ca2, L - 1.0)
+        coll = _mix_coll(coll1, coll2, L - 1.0)
+    total_wire = sum(v["wire_bytes"] for v in coll.values())
+    return cost, coll, total_wire
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
+             force: bool = False, save_hlo: bool = False,
+             probe: bool = True, variant: dict = None,
+             tag: str = "") -> dict:
+    variant = variant or {}
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    suffix = f"__variant-{tag}" if tag else ""
+    out_path = ART_DIR / f"{arch_id}__{shape_name}__{mesh_kind}{suffix}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    arch = get_arch(arch_id)
+    result = {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+              "variant": variant, "tag": tag,
+              "n_layers": arch.config.n_layers,
+              "params": arch.config.param_count(),
+              "active_params": arch.config.active_param_count()}
+    if not arch.shape_runnable(shape_name):
+        result["status"] = "skipped"
+        result["skip_reason"] = arch.skips[shape_name]
+        out_path.write_text(json.dumps(result, indent=2))
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        fn, args, in_shd, donate, out_shd = build_cell(arch, shape_name,
+                                                       mesh, variant)
+        with mesh:
+            jfn = jax.jit(fn, in_shardings=in_shd, out_shardings=out_shd,
+                          donate_argnums=donate)
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            t1 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t1
+        hlo = compiled.as_text()
+        coll_total, coll = hlo_analysis.collective_summary(hlo)
+        result.update({
+            "status": "ok",
+            "devices": int(mesh.devices.size),
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory_analysis": _mem_analysis_dict(compiled),
+            "cost_analysis_raw": _cost_analysis_dict(compiled),
+            "collectives_raw": coll,
+            "hlo_lines": hlo.count("\n"),
+        })
+        if probe:
+            t2 = time.time()
+            cost_c, coll_c, wire_c = corrected_costs(arch, shape_name, mesh,
+                                                     variant)
+            result["cost_analysis"] = cost_c
+            result["collectives"] = coll_c
+            result["collective_wire_bytes_per_device"] = wire_c
+            result["probe_s"] = round(time.time() - t2, 2)
+        if save_hlo:
+            (ART_DIR / f"{arch_id}__{shape_name}__{mesh_kind}.hlo.txt"
+             ).write_text(hlo)
+    except Exception as e:
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+    out_path.write_text(json.dumps(result, indent=2))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--variant", action="append", default=[],
+                    help="key=value perf-variant knobs (repeatable)")
+    ap.add_argument("--tag", default="", help="artifact suffix for variants")
+    args = ap.parse_args()
+    variant = {}
+    for kv in args.variant:
+        k, _, v = kv.partition("=")
+        variant[k] = v
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a in sorted(all_archs()) for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+
+    n_ok = n_skip = n_err = 0
+    for arch_id, shape_name in cells:
+        for mk in meshes:
+            r = run_cell(arch_id, shape_name, mk, force=args.force,
+                         save_hlo=args.save_hlo, probe=not args.no_probe,
+                         variant=variant, tag=args.tag)
+            status = r["status"]
+            if status == "ok":
+                n_ok += 1
+                ca = r.get("cost_analysis", r.get("cost_analysis_raw", {}))
+                mem = r.get("memory_analysis", {})
+                print(f"[OK]   {arch_id:28s} {shape_name:12s} {mk:6s} "
+                      f"compile={r.get('compile_s', 0):7.1f}s "
+                      f"flops/dev={ca.get('flops', 0):.3e} "
+                      f"wire_B/dev={r.get('collective_wire_bytes_per_device', 0):.3e} "
+                      f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB",
+                      flush=True)
+            elif status == "skipped":
+                n_skip += 1
+                print(f"[SKIP] {arch_id:28s} {shape_name:12s} {mk:6s}", flush=True)
+            else:
+                n_err += 1
+                print(f"[ERR]  {arch_id:28s} {shape_name:12s} {mk:6s} "
+                      f"{r['error'][:160]}", flush=True)
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,118 @@
+"""Parse collective ops and their byte volumes out of lowered/compiled HLO.
+
+``compiled.cost_analysis()`` reports FLOPs and bytes-accessed but NOT
+collective traffic, so we scan the (post-SPMD-partitioning, per-device) HLO
+text and sum operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# e.g.  %all-reduce.5 = f32[8,128]{1,0} all-reduce(f32[8,128]{1,0} %add.3, ...)
+_OP_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"\b(pred|[sufbc]\d+|bf16|f8e4m3fn|f8e5m2|token)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))   # [n_groups, group_size]<=[...]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(1, m.group(1).count(",") + 1)
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Returns {kind: {count, bytes, wire_bytes}} from per-device HLO.
+
+    Post-optimization HLO doesn't print operand shapes inline, so we parse the
+    *result* shape (printed between '=' and the op name) and derive the
+    per-device payload from the collective semantics:
+
+      all-gather:        operand = result / group          (result is gathered)
+      reduce-scatter:    operand = result * group
+      all-reduce / all-to-all / collective-permute: operand = result
+
+    ``bytes``     = per-device operand payload.
+    ``wire_bytes``= ring-algorithm link-traffic estimate per device:
+      all-gather / reduce-scatter: (g-1)/g * full payload
+      all-reduce: 2 * (g-1)/g * payload
+      all-to-all: (g-1)/g * payload;  collective-permute: payload.
+
+    '-done' halves of async pairs are skipped so each op counts once.
+    NOTE: ops inside while-loop bodies appear once in the HLO text; callers
+    must scale per-layer collectives by the trip count (see dryrun.py).
+    """
+    stats: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "bytes": 0.0, "wire_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        if " = " not in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if m.group(2) == "-done":  # async completion: counted at -start
+            continue
+        kind = m.group(1)
+        eq = line.index(" = ")
+        result_seg = line[eq + 3:m.start()]
+        res_bytes = 0
+        for sm in _SHAPE_RE.finditer(result_seg):
+            res_bytes += _shape_bytes(sm.group(1), sm.group(2))
+        g = _group_size(line)
+        if kind == "all-gather":
+            payload = res_bytes          # full gathered size
+            operand = res_bytes / g
+            wire = (g - 1) / g * payload
+        elif kind == "reduce-scatter":
+            payload = res_bytes * g
+            operand = payload
+            wire = (g - 1) / g * payload
+        elif kind == "all-reduce":
+            operand = res_bytes
+            wire = 2 * (g - 1) / g * res_bytes
+        elif kind == "all-to-all":
+            operand = res_bytes
+            wire = (g - 1) / g * res_bytes
+        else:  # collective-permute
+            operand = res_bytes
+            wire = res_bytes
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += float(operand)
+        stats[kind]["wire_bytes"] += float(wire)
+    return dict(stats)
+
+
+def collective_summary(hlo_text: str) -> Tuple[float, Dict[str, Dict[str, float]]]:
+    stats = parse_collectives(hlo_text)
+    total = sum(v["wire_bytes"] for v in stats.values())
+    return total, stats

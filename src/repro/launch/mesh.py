@@ -1,0 +1,30 @@
+"""Production mesh definitions.
+
+A *pod* is the UFA analogue of a region: the production deployment is
+dual-pod active-active (2 × 256 chips).  ``make_production_mesh`` is a
+function (never a module-level constant) so importing this module never
+touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (possibly fake) local devices exist."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BANDWIDTH = 819e9         # B/s
+ICI_LINK_BANDWIDTH = 50e9     # B/s per link
+HBM_BYTES = 16 * 2**30        # 16 GiB
+VMEM_BYTES = 128 * 2**20

@@ -1,0 +1,180 @@
+"""Roofline analysis from the dry-run artifacts (single-pod mesh).
+
+Per (arch x shape):
+  compute term    = HLO_FLOPs_global / (chips * peak_FLOP/s)
+                  = flops_per_device / peak            [s]
+  memory term     = HLO_bytes_per_device / HBM_bw      [s]
+  collective term = wire_bytes_per_device / link_bw    [s]
+
+plus MODEL_FLOPS (6*N*D train / 2*N*D prefill / 2*N*B decode, N = active
+params for MoE), the useful-compute ratio MODEL_FLOPS / HLO_FLOPs (catches
+remat/redundancy waste), the dominant bottleneck, and a roofline fraction
+  = (MODEL_FLOPS time) / dominant term
+— the score an ideal kernel/sharding would push toward 1.0.
+
+Caveats recorded in EXPERIMENTS.md: HLO numbers come from the CPU-backend
+SPMD compile (TPU is the target, not the runtime); while-loop bodies are
+cost-corrected by the dryrun two-point probe; 'bytes accessed' is XLA's
+buffer-traffic estimate, an upper bound on HBM traffic after fusion.
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--mesh single]
+Writes artifacts/roofline.md + artifacts/roofline.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, all_archs
+from repro.launch.mesh import (HBM_BANDWIDTH, ICI_LINK_BANDWIDTH,
+                               PEAK_FLOPS_BF16)
+
+ART = Path(__file__).resolve().parents[3] / "artifacts"
+
+
+def model_flops(arch, shape_name: str) -> float:
+    ss = SHAPES[shape_name]
+    n = arch.config.active_param_count()
+    if ss.kind == "train":
+        return 6.0 * n * ss.global_batch * ss.seq_len
+    if ss.kind == "prefill":
+        return 2.0 * n * ss.global_batch * ss.seq_len
+    return 2.0 * n * ss.global_batch      # decode: one token per sequence
+
+
+def decode_ideal_bytes(arch, shape_name: str) -> float:
+    """Ideal HBM traffic for one decode step: every active parameter read
+    once (bf16) + the visible KV cache read once — the bandwidth floor that
+    defines decode roofline."""
+    cfg = arch.config
+    ss = SHAPES[shape_name]
+    param_bytes = 2.0 * cfg.active_param_count()
+    kv_bytes = 0.0
+    if cfg.has_attn:
+        windows = list(cfg.window_pattern) or [0]
+        reps = (cfg.n_layers + len(windows) - 1) // len(windows)
+        per_layer = (windows * reps)[: cfg.n_layers]
+        for w in per_layer:
+            vis = min(ss.seq_len, w) if w > 0 else ss.seq_len
+            kv_bytes += (2 * ss.global_batch * vis * cfg.n_kv_heads
+                         * cfg.d_head * 2.0)
+    if cfg.has_ssm:
+        sd = cfg.ssm_dims
+        kv_bytes += (ss.global_batch * sd.n_heads * sd.head_dim
+                     * sd.d_state * 4.0 * cfg.n_layers)
+    return param_bytes + kv_bytes
+
+
+def suggest(dom: str, arch, shape_name: str) -> str:
+    ss = SHAPES[shape_name]
+    if dom == "collective":
+        if arch.config.is_moe:
+            return ("shrink expert-FSDP gather: shard experts over more axes "
+                    "or cache gathered expert slabs across microbatches")
+        if ss.kind == "decode":
+            return ("drop FSDP for decode (params fit replicated per model "
+                    "shard) to remove per-token weight all-gathers")
+        return ("overlap the FSDP all-gather with the previous layer's "
+                "compute (async collectives) or widen the model axis share")
+    if dom == "memory":
+        if ss.kind == "decode":
+            return ("decode is cache-bandwidth-bound by nature; quantize the "
+                    "KV cache (int8) or batch more sequences per step")
+        return ("reduce remat recompute (dots-saveable policy) and fuse the "
+                "attention softmax (flash kernel) to cut score traffic")
+    return ("compute-bound: raise MXU occupancy — bigger per-device batch, "
+            "fused flash-attention kernel, avoid fp32 upcasts in hot paths")
+
+
+def analyze(mesh_kind: str = "single"):
+    rows = []
+    for arch_id, arch in sorted(all_archs().items()):
+        for shape_name in SHAPES:
+            p = ART / "dryrun" / f"{arch_id}__{shape_name}__{mesh_kind}.json"
+            if not p.exists():
+                continue
+            r = json.loads(p.read_text())
+            if r["status"] == "skipped":
+                rows.append({"arch": arch_id, "shape": shape_name,
+                             "status": "skipped"})
+                continue
+            if r["status"] != "ok":
+                rows.append({"arch": arch_id, "shape": shape_name,
+                             "status": "error", "error": r.get("error")})
+                continue
+            ca = r.get("cost_analysis") or r["cost_analysis_raw"]
+            chips = r["devices"]
+            fl_dev = ca.get("flops", 0.0)
+            by_dev = ca.get("bytes accessed", 0.0)
+            wire_dev = r.get("collective_wire_bytes_per_device", 0.0)
+            t_comp = fl_dev / PEAK_FLOPS_BF16
+            t_mem = by_dev / HBM_BANDWIDTH
+            t_coll = wire_dev / ICI_LINK_BANDWIDTH
+            mf = model_flops(arch, shape_name)
+            ss = SHAPES[shape_name]
+            if ss.kind == "decode":
+                # decode is bandwidth-limited: ideal = params+cache once
+                t_useful = (decode_ideal_bytes(arch, shape_name)
+                            / (chips * HBM_BANDWIDTH))
+            else:
+                t_useful = mf / (chips * PEAK_FLOPS_BF16)
+            dom = max((t_comp, "compute"), (t_mem, "memory"),
+                      (t_coll, "collective"))[1]
+            t_dom = max(t_comp, t_mem, t_coll)
+            rows.append({
+                "arch": arch_id, "shape": shape_name, "status": "ok",
+                "chips": chips,
+                "t_compute_s": t_comp, "t_memory_s": t_mem,
+                "t_collective_s": t_coll, "dominant": dom,
+                "model_flops": mf,
+                "hlo_flops_global": fl_dev * chips,
+                "useful_ratio": mf / max(1.0, fl_dev * chips),
+                "roofline_fraction": t_useful / max(1e-12, t_dom),
+                "hbm_temp_gib": r.get("memory_analysis", {}).get(
+                    "temp_size_in_bytes", 0) / 2**30,
+                "suggestion": suggest(dom, arch, shape_name),
+            })
+    return rows
+
+
+def to_markdown(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful ratio | roofline frac | next lever |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r['status']} | — | — | — |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} | {r['suggestion'][:60]} |\n")
+    return "".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    rows = analyze(args.mesh)
+    (ART / "roofline.json").write_text(json.dumps(rows, indent=2))
+    md = to_markdown(rows)
+    (ART / "roofline.md").write_text(md)
+    print(md)
+    ok = [r for r in rows if r["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        coll = max(ok, key=lambda r: r["t_collective_s"] /
+                   max(1e-12, max(r["t_compute_s"], r["t_memory_s"])))
+        print(f"\nworst roofline fraction: {worst['arch']} {worst['shape']} "
+              f"({worst['roofline_fraction']:.3f})")
+        print(f"most collective-bound:   {coll['arch']} {coll['shape']}")
+
+
+if __name__ == "__main__":
+    main()

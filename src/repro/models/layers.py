@@ -1,0 +1,638 @@
+"""Core neural layers, pure JAX (no flax).
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every layer is a
+pair of functions: ``init_*(key, cfg) -> params`` and ``apply(params, x, ...)``.
+Layers are written so that a stack of them can be driven by ``jax.lax.scan``
+with parameters stacked along a leading layer axis.
+
+Compute-dtype policy: matmuls run in the activation dtype (bf16 in production)
+with fp32 accumulation via ``preferred_element_type``; softmax / norms / router
+run in fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.ctx import hint
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, dtype, in_axis_size=None):
+    """Truncated-normal fan-in init (maxtext-style)."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def _embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def rmsnorm_noscale(x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Scale-free RMS norm (used for qk-norm when per-head scale is folded)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, d_head); positions: (..., seq) int32."""
+    d_head = x.shape[-1]
+    freqs = rope_frequencies(d_head, theta)  # (d_head//2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, d/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., seq, 1, d/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional sliding window, optional qk-norm)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int, d_head: int,
+                   qk_norm: bool, dtype=jnp.float32) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(k1, (d_model, n_heads * d_head), dtype),
+        "wk": _dense_init(k2, (d_model, n_kv_heads * d_head), dtype),
+        "wv": _dense_init(k3, (d_model, n_kv_heads * d_head), dtype),
+        "wo": _dense_init(k4, (n_heads * d_head, d_model), dtype, in_axis_size=n_heads * d_head),
+    }
+    if qk_norm:
+        p["q_norm"] = init_rmsnorm(d_head, dtype)
+        p["k_norm"] = init_rmsnorm(d_head, dtype)
+    return p
+
+
+def quantize_kv(x: jnp.ndarray):
+    """Per-(token, head) symmetric int8 quantization of K/V.
+    x: (B, S, KV, dh) -> (int8 values, fp32 scales (B, S, KV))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _attn_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray, window) -> jnp.ndarray:
+    """Boolean (q, k) mask. window: scalar (traced ok); <=0 means global causal."""
+    causal = k_pos[None, :] <= q_pos[:, None]
+    in_window = (q_pos[:, None] - k_pos[None, :]) < jnp.maximum(window, 1)
+    return jnp.where(window > 0, causal & in_window, causal)
+
+
+def _blocked_local_attention(q, k, v, window, block: int, scale: float):
+    """Sliding-window attention computed over (block, 2*block) tiles: each
+    query block attends to itself + the previous block, masked to the exact
+    (traced) window.  Cuts score cost from O(S^2) to O(S * 2*block) — the
+    pure-XLA analogue of the windowed flash kernel.  Requires S % block == 0
+    and window <= block.  q/k/v: (B, S, H, d) with KV pre-repeated."""
+    B, S, H, d = q.shape
+    nb = S // block
+    qb = q.reshape(B, nb, block, H, d)
+    kb = k.reshape(B, nb, block, H, d)
+    vb = v.reshape(B, nb, block, H, d)
+    pad = ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0))
+    k2 = jnp.concatenate([jnp.pad(kb, pad)[:, :-1], kb], axis=2)  # (B,nb,2b,H,d)
+    v2 = jnp.concatenate([jnp.pad(vb, pad)[:, :-1], vb], axis=2)
+    scores = jnp.einsum("bnqhd,bnkhd->bnhqk", qb, k2,
+                        preferred_element_type=jnp.float32) * scale
+    q_pos = jnp.arange(block)[:, None]                    # within-block
+    k_pos = jnp.arange(2 * block)[None, :] - block        # relative to block
+    dist = q_pos - k_pos
+    mask = (dist >= 0) & (dist < jnp.maximum(window, 1))
+    # first block has no predecessor: mask the padded half
+    first = (jnp.arange(nb) == 0)[None, :, None, None, None]
+    pad_mask = (k_pos >= 0)[None, None, None, :, :] | ~first
+    scores = jnp.where(mask[None, None, None, :, :] & pad_mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bnhqk,bnkhd->bnqhd", probs, v2)
+    return out.reshape(B, S, H, d)
+
+
+def attention(params: Params, x: jnp.ndarray, *, n_heads: int, n_kv_heads: int,
+              d_head: int, theta: float, window=0, positions: Optional[jnp.ndarray] = None,
+              qk_norm: bool = False, eps: float = 1e-6,
+              kv_cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              cache_len: Optional[jnp.ndarray] = None,
+              local_block: int = 0,
+              seq_parallel: bool = False) -> Tuple[jnp.ndarray, Optional[Tuple]]:
+    """Multi-head GQA attention.
+
+    x: (B, S, D).  If ``kv_cache`` is given (decode path), it is a tuple
+    (k_cache, v_cache) of shape (B, max_seq, n_kv, d_head) and ``cache_len``
+    is the number of valid entries; the new k/v are written at cache_len and
+    attention runs over the cache.  Returns (out, new_cache).
+    """
+    B, S, D = x.shape
+    cdt = x.dtype
+    x = hint(x, "batch", None, "embed")
+    q = hint(x @ params["wq"].astype(cdt), "batch", None, "ff")
+    k = hint(x @ params["wk"].astype(cdt), "batch", None, "ff")
+    v = hint(x @ params["wv"].astype(cdt), "batch", None, "ff")
+    q = q.reshape(B, S, n_heads, d_head)
+    k = k.reshape(B, S, n_kv_heads, d_head)
+    v = v.reshape(B, S, n_kv_heads, d_head)
+
+    if qk_norm:
+        q = rmsnorm(params["q_norm"], q, eps)
+        k = rmsnorm(params["k_norm"], k, eps)
+
+    if positions is None:
+        if kv_cache is not None:
+            positions = (cache_len + jnp.arange(S, dtype=jnp.int32))[None, :]  # (1, S)
+        else:
+            positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        from repro.dist import ctx as dctx
+        from repro.dist.splitkv import splitkv_decode_attention
+        quant = len(kv_cache) == 4
+        if quant:
+            k_cache, v_cache, k_scale, v_scale = kv_cache
+            kq, ks_new = quantize_kv(k)
+            vq, vs_new = quantize_kv(v)
+        else:
+            k_cache, v_cache = kv_cache
+            k_scale = v_scale = None
+        max_seq = k_cache.shape[1]
+        start = cache_len.reshape(())
+        mesh = dctx.current_mesh()
+        n_seq = dctx.axis_size("kv_seq")
+        if (mesh is not None and n_seq > 1 and S == 1
+                and max_seq % n_seq == 0):
+            # manual split-KV (flash-decode) under shard_map: local cache
+            # write + partial softmax with pmax/psum LSE merge.
+            batch_rule = dctx.get_rule("batch") or ()
+            baxes = ((batch_rule,) if isinstance(batch_rule, str)
+                     else tuple(batch_rule))
+            seq_rule = dctx.get_rule("kv_seq")
+            if quant:
+                out, caches = splitkv_decode_attention(
+                    q, kq, vq, k_cache, v_cache, start, window,
+                    mesh=mesh, batch_axes=baxes, seq_axis=seq_rule,
+                    k_scale=k_scale, v_scale=v_scale,
+                    new_scales=(ks_new, vs_new))
+            else:
+                out, caches = splitkv_decode_attention(
+                    q, k, v, k_cache, v_cache, start, window,
+                    mesh=mesh, batch_axes=baxes, seq_axis=seq_rule)
+            out = out.reshape(B, S, n_heads * d_head)
+            return (hint(out @ params["wo"].astype(cdt),
+                         "batch", None, "embed"), caches)
+        # single-device / unsharded fallback
+        if quant:
+            k_cache = lax.dynamic_update_slice(k_cache, kq, (0, start, 0, 0))
+            v_cache = lax.dynamic_update_slice(v_cache, vq, (0, start, 0, 0))
+            k_scale = lax.dynamic_update_slice(k_scale, ks_new, (0, start, 0))
+            v_scale = lax.dynamic_update_slice(v_scale, vs_new, (0, start, 0))
+            new_cache = (k_cache, v_cache, k_scale, v_scale)
+            k_all = (k_cache.astype(jnp.float32)
+                     * k_scale[..., None]).astype(cdt)
+            v_all = (v_cache.astype(jnp.float32)
+                     * v_scale[..., None]).astype(cdt)
+        else:
+            k_cache = lax.dynamic_update_slice(
+                k_cache, k.astype(k_cache.dtype), (0, start, 0, 0))
+            v_cache = lax.dynamic_update_slice(
+                v_cache, v.astype(v_cache.dtype), (0, start, 0, 0))
+            new_cache = (k_cache, v_cache)
+            k_all = k_cache.astype(cdt)
+            v_all = v_cache.astype(cdt)
+        k_pos = jnp.arange(max_seq, dtype=jnp.int32)
+        valid = k_pos[None, :] < (start + S)  # (1, max_seq)
+    else:
+        k_all, v_all = k, v
+        k_pos = positions[0].astype(jnp.int32)
+        valid = None
+
+    q_pos = positions[0].astype(jnp.int32) if kv_cache is None else (
+        cache_len + jnp.arange(S, dtype=jnp.int32))
+    mask = _attn_mask(q_pos, k_pos, window)  # (S, K)
+    if valid is not None:
+        mask = mask & valid[0][None, :]
+
+    group = n_heads // n_kv_heads
+    if kv_cache is None:
+        # train/prefill: repeat KV to full heads so scores shard per-head
+        # over the model axis (keeps fp32 score memory per device bounded).
+        if seq_parallel:
+            # SP attention for TP-unfriendly head counts: shard the QUERY
+            # sequence over the model axis instead of heads; K/V replicate.
+            kr = hint(jnp.repeat(k_all, group, axis=2), "batch", None, None, None)
+            vr = hint(jnp.repeat(v_all, group, axis=2), "batch", None, None, None)
+            qh = hint(q, "batch", "seq", None, None)
+        else:
+            kr = hint(jnp.repeat(k_all, group, axis=2), "batch", None, "heads", None)
+            vr = hint(jnp.repeat(v_all, group, axis=2), "batch", None, "heads", None)
+            qh = hint(q, "batch", None, "heads", None)
+        scale = 1.0 / math.sqrt(d_head)
+        if local_block > 0:
+            def _local(qkv):
+                return _blocked_local_attention(*qkv, window, local_block, scale)
+
+            def _full(qkv):
+                qh, kr, vr = qkv
+                s = jnp.einsum("bshd,bkhd->bhsk", qh, kr,
+                               preferred_element_type=jnp.float32) * scale
+                if seq_parallel:
+                    s = hint(s, "batch", None, "seq", None)
+                else:
+                    s = hint(s, "batch", "heads", None, None)
+                s = jnp.where(mask[None, None, :, :], s, -1e30)
+                p = jax.nn.softmax(s, axis=-1).astype(cdt)
+                return jnp.einsum("bhsk,bkhd->bshd", p, vr)
+
+            out = lax.cond(window > 0, _local, _full, (qh, kr, vr))
+        else:
+            scores = jnp.einsum("bshd,bkhd->bhsk", qh, kr,
+                                preferred_element_type=jnp.float32) * scale
+            if seq_parallel:
+                scores = hint(scores, "batch", None, "seq", None)
+            else:
+                scores = hint(scores, "batch", "heads", None, None)
+            scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+            probs = jax.nn.softmax(scores, axis=-1).astype(cdt)
+            out = jnp.einsum("bhsk,bkhd->bshd", probs, vr)
+    else:
+        # decode: grouped-query attention against the (seq-sharded) cache
+        qg = q.reshape(B, S, n_kv_heads, group, d_head)
+        scores = jnp.einsum("bsngh,bknh->bngsk", qg, k_all,
+                            preferred_element_type=jnp.float32)
+        scores = hint(scores / math.sqrt(d_head),
+                      "batch", None, None, None, "kv_seq")
+        scores = jnp.where(mask[None, None, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(cdt)
+        out = jnp.einsum("bngsk,bknh->bsngh", probs, v_all)
+    out = hint(out.reshape(B, S, n_heads * d_head), "batch", None, "ff")
+    return hint(out @ params["wo"].astype(cdt), "batch", None, "embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": _dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": _dense_init(k3, (d_ff, d_model), dtype, in_axis_size=d_ff),
+    }
+
+
+def mlp(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    cdt = x.dtype
+    nb = x.ndim - 2  # leading batch-like dims
+    bspec = ("batch",) + (None,) * (nb - 1) if nb else ()
+    x = hint(x, *bspec, None, "embed") if nb else x
+    g = hint(x @ params["w_gate"].astype(cdt), *bspec, None, "ff")
+    u = hint(x @ params["w_up"].astype(cdt), *bspec, None, "ff")
+    out = (jax.nn.silu(g) * u) @ params["w_down"].astype(cdt)
+    return hint(out, *bspec, None, "embed") if nb else out
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k, capacity-dropped, sort-free scatter dispatch)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, d_model: int, n_experts: int, d_ff: int, n_shared: int = 0,
+             dtype=jnp.float32) -> Params:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(k1, (d_model, n_experts), jnp.float32),
+        "w_gate": _dense_init(k2, (n_experts, d_model, d_ff), dtype),
+        "w_up": _dense_init(k3, (n_experts, d_model, d_ff), dtype),
+        "w_down": _dense_init(k4, (n_experts, d_ff, d_model), dtype, in_axis_size=d_ff),
+    }
+    if n_shared:
+        p["shared"] = init_mlp(k5, d_model, n_shared * d_ff, dtype)
+    return p
+
+
+def moe_routing(router_w: jnp.ndarray, x: jnp.ndarray, top_k: int):
+    """Router in fp32. x: (T, D). Returns (weights (T,k), experts (T,k), aux_loss)."""
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = lax.top_k(probs, top_k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    # Switch-style load-balancing aux loss
+    n_experts = router_w.shape[1]
+    me = jnp.mean(probs, axis=0)                                    # (E,)
+    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], n_experts, dtype=jnp.float32), axis=0)
+    aux = n_experts * jnp.sum(me * ce)
+    return top_w, top_e, aux
+
+
+def _expert_positions(top_e: jnp.ndarray, n_experts: int) -> jnp.ndarray:
+    """Position of each (token, slot) within its expert queue, counted jointly
+    across slots in (slot-major, token) order.  top_e: (T, k) -> pos (T, k)."""
+    T, k = top_e.shape
+    flat = top_e.T.reshape(-1)  # slot-major: all slot-0 tokens first
+    onehot = jax.nn.one_hot(flat, n_experts, dtype=jnp.int32)  # (T*k, E)
+    pos_flat = jnp.cumsum(onehot, axis=0) - 1                   # (T*k, E)
+    pos = jnp.take_along_axis(pos_flat, flat[:, None], axis=1)[:, 0]
+    return pos.reshape(k, T).T  # (T, k)
+
+
+def _expert_positions_big(top_e: jnp.ndarray, n_experts: int) -> jnp.ndarray:
+    """Sort-based variant that avoids the (T*k, E) one-hot (for big E)."""
+    T, k = top_e.shape
+    flat = top_e.T.reshape(-1)
+    tk = flat.shape[0]
+    order = jnp.argsort(flat, stable=True)
+    counts = jnp.zeros((n_experts,), jnp.int32).at[flat].add(1)
+    starts = jnp.cumsum(counts) - counts                       # (E,)
+    pos_sorted = jnp.arange(tk, dtype=jnp.int32) - starts[flat[order]]
+    pos = jnp.zeros((tk,), jnp.int32).at[order].set(pos_sorted)
+    return pos.reshape(k, T).T
+
+
+def moe_apply_local(params: Params, x: jnp.ndarray, *, top_k: int,
+                    capacity: int, n_experts: int,
+                    expert_start: int = 0, n_local_experts: Optional[int] = None,
+                    big_e_threshold: int = 64) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Apply a (possibly expert-sharded) MoE to local tokens.
+
+    x: (T, D) local tokens (hidden replicated across the expert axis).
+    params hold only the local expert slab [expert_start, expert_start+n_local).
+    Returns (partial y (T, D), aux loss).  When experts are sharded the caller
+    must psum y over the expert axis.
+    """
+    T, D = x.shape
+    cdt = x.dtype
+    n_local = n_local_experts if n_local_experts is not None else n_experts
+    top_w, top_e, aux = moe_routing(params["router"], x, top_k)
+
+    if n_experts >= big_e_threshold:
+        pos = _expert_positions_big(top_e, n_experts)
+    else:
+        pos = _expert_positions(top_e, n_experts)
+
+    # Scatter tokens into per-expert queues: xe (n_local * capacity, D)
+    xe = jnp.zeros((n_local * capacity + 1, D), cdt)  # +1 = trash row
+    trash = n_local * capacity
+    for s in range(top_k):
+        e = top_e[:, s] - expert_start
+        ok = (e >= 0) & (e < n_local) & (pos[:, s] < capacity)
+        dst = jnp.where(ok, e * capacity + jnp.minimum(pos[:, s], capacity - 1), trash)
+        xe = xe.at[dst].add(jnp.where(ok[:, None], x, 0), mode="drop",
+                            unique_indices=False)
+    xe = xe[:trash].reshape(n_local, capacity, D)
+
+    # Expert GEMMs (grouped): (E_l, C, D) x (E_l, D, F)
+    g = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"].astype(cdt),
+                   preferred_element_type=jnp.float32).astype(cdt)
+    u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(cdt),
+                   preferred_element_type=jnp.float32).astype(cdt)
+    h = jax.nn.silu(g) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(cdt),
+                    preferred_element_type=jnp.float32).astype(cdt)
+    ye = ye.reshape(n_local * capacity, D)
+    ye = jnp.concatenate([ye, jnp.zeros((1, D), cdt)], axis=0)
+
+    # Combine: gather each slot's expert output back to its token
+    y = jnp.zeros((T, D), cdt)
+    for s in range(top_k):
+        e = top_e[:, s] - expert_start
+        ok = (e >= 0) & (e < n_local) & (pos[:, s] < capacity)
+        src = jnp.where(ok, e * capacity + jnp.minimum(pos[:, s], capacity - 1), trash)
+        y = y + ye[src] * jnp.where(ok, top_w[:, s], 0.0).astype(cdt)[:, None]
+
+    if "shared" in params:
+        y = y + mlp(params["shared"], x)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) block
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    d_model: int
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    d_state: int
+    n_groups: int = 1
+    d_conv: int = 4
+    chunk: int = 64
+
+
+def ssm_dims(d_model: int, d_state: int, head_dim: int = 64, expand: int = 2,
+             chunk: int = 64) -> SSMDims:
+    d_inner = expand * d_model
+    return SSMDims(d_model=d_model, d_inner=d_inner, n_heads=d_inner // head_dim,
+                   head_dim=head_dim, d_state=d_state, chunk=chunk)
+
+
+def init_ssm(key, dims: SSMDims, dtype=jnp.float32) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    conv_dim = dims.d_inner + 2 * dims.n_groups * dims.d_state
+    d_in_proj = 2 * dims.d_inner + 2 * dims.n_groups * dims.d_state + dims.n_heads
+    return {
+        "in_proj": _dense_init(k1, (dims.d_model, d_in_proj), dtype),
+        "conv_w": _dense_init(k2, (dims.d_conv, conv_dim), dtype, in_axis_size=dims.d_conv),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, dims.n_heads)).astype(jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(k3, (dims.n_heads,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "d_skip": jnp.ones((dims.n_heads,), jnp.float32),
+        "norm": init_rmsnorm(dims.d_inner, dtype),
+        "out_proj": _dense_init(k4, (dims.d_inner, dims.d_model), dtype,
+                                in_axis_size=dims.d_inner),
+    }
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable 'segment sum' producing L[i, j] = sum_{j < m <= i} x[m] (i >= j).
+    x: (..., c) -> (..., c, c) with -inf above the diagonal."""
+    c = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                b: jnp.ndarray, c: jnp.ndarray, chunk: int,
+                init_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD (state-space dual) exact chunked scan — pure-jnp reference used by
+    the model (the Pallas kernel optionally replaces the heavy inner einsums).
+
+    Follows the Mamba-2 ``ssd_minimal_discrete`` algorithm with
+    ``X <- dt*x`` and ``A <- dt*a`` discretization done here.
+
+    x: (B, S, H, P); dt: (B, S, H) (already softplus'd, >0); a: (H,) (negative);
+    b, c: (B, S, G, N).  Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+
+    def to_heads(t):  # (B,S,G,N) -> (B,nc,c,H,N)
+        th = jnp.repeat(t, rep, axis=2) if rep != 1 else t
+        return th.reshape(B, nc, chunk, H, N).astype(jnp.float32)
+
+    xw = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+          ).reshape(B, nc, chunk, H, P)                    # dt-weighted input
+    bb = to_heads(b)
+    cb = to_heads(c)
+    da = (dt.astype(jnp.float32) * a[None, None, :]).reshape(B, nc, chunk, H)
+    da_h = da.transpose(0, 1, 3, 2)                        # (B,nc,H,c)
+    da_cs = jnp.cumsum(da_h, axis=-1)                      # (B,nc,H,c)
+
+    # --- 1. intra-chunk (diagonal blocks) ---
+    L = jnp.exp(_segsum(da_h))                             # (B,nc,H,c,c)
+    y_diag = jnp.einsum("bzihn,bzjhn,bzhij,bzjhp->bzihp",
+                        cb, bb, L, xw)                     # (B,nc,c,H,P)
+
+    # --- 2. state contributed by each chunk ---
+    decay_states = jnp.exp(da_cs[..., -1:] - da_cs)        # (B,nc,H,c)
+    states = jnp.einsum("bzchn,bzhc,bzchp->bzhpn", bb, decay_states, xw)
+
+    # --- 3. inter-chunk recurrence ---
+    chunk_decay = jnp.exp(da_cs[..., -1])                  # (B,nc,H)
+    s0 = jnp.zeros((B, H, P, N), jnp.float32) if init_state is None \
+        else init_state.astype(jnp.float32)
+
+    def scan_fn(carry, inp):
+        dec, st = inp                                      # dec: (B,H), st: (B,H,P,N)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                  # emit state *entering* the chunk
+
+    final_state, prev_states = lax.scan(
+        scan_fn, s0,
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (B,nc,H,P,N)
+
+    # --- 4. contribution of previous chunks' state ---
+    state_decay = jnp.exp(da_cs)                           # (B,nc,H,c)
+    y_off = jnp.einsum("bzchn,bzhpn,bzhc->bzchp", cb, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y, final_state
+
+
+def ssm_step(params: Params, dims: SSMDims, x_t: jnp.ndarray,
+             conv_state: jnp.ndarray, ssm_state: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrent step (decode).  x_t: (B, D).
+    conv_state: (B, d_conv-1, conv_dim); ssm_state: (B, H, P, N)."""
+    B, D = x_t.shape
+    d = dims
+    cdt = x_t.dtype
+    zxbcdt = x_t @ params["in_proj"].astype(cdt)
+    z, xin, bc, dt = jnp.split(
+        zxbcdt, [d.d_inner, 2 * d.d_inner, 2 * d.d_inner + 2 * d.n_groups * d.d_state],
+        axis=-1)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)          # (B, conv_dim)
+    # causal conv over the rolling window
+    window = jnp.concatenate([conv_state, conv_in[:, None, :]], axis=1)  # (B,dc,cd)
+    conv_out = jnp.einsum("btc,tc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+    new_conv_state = window[:, 1:, :]
+
+    xc = conv_out[:, :d.d_inner].reshape(B, d.n_heads, d.head_dim)
+    bcx = conv_out[:, d.d_inner:]
+    b_t = bcx[:, :d.n_groups * d.d_state].reshape(B, d.n_groups, d.d_state)
+    c_t = bcx[:, d.n_groups * d.d_state:].reshape(B, d.n_groups, d.d_state)
+    rep = d.n_heads // d.n_groups
+    b_h = jnp.repeat(b_t, rep, axis=1)                     # (B,H,N)
+    c_h = jnp.repeat(c_t, rep, axis=1)
+
+    dt_t = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["a_log"])                          # (H,)
+    decay = jnp.exp(dt_t * a[None, :])                     # (B,H)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt_t, xc.astype(jnp.float32), b_h)
+    new_ssm_state = ssm_state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm_state, c_h)
+    y = y + params["d_skip"][None, :, None] * xc.astype(jnp.float32)
+    y = y.reshape(B, d.d_inner).astype(cdt)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["out_proj"].astype(cdt), new_conv_state, new_ssm_state
+
+
+def ssm_apply(params: Params, dims: SSMDims, x: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence SSD pass (train / prefill).  x: (B, S, D)."""
+    B, S, D = x.shape
+    d = dims
+    cdt = x.dtype
+    zxbcdt = x @ params["in_proj"].astype(cdt)             # (B,S,*)
+    z, xin, bc, dt = jnp.split(
+        zxbcdt, [d.d_inner, 2 * d.d_inner, 2 * d.d_inner + 2 * d.n_groups * d.d_state],
+        axis=-1)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)          # (B,S,conv_dim)
+    # depthwise causal conv, kernel d_conv
+    pad = jnp.pad(conv_in, ((0, 0), (d.d_conv - 1, 0), (0, 0)))
+    conv_out = sum(pad[:, i:i + S, :].astype(jnp.float32) *
+                   params["conv_w"][i].astype(jnp.float32)
+                   for i in range(d.d_conv))
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32)).astype(cdt)
+
+    xc = conv_out[..., :d.d_inner].reshape(B, S, d.n_heads, d.head_dim)
+    bcx = conv_out[..., d.d_inner:]
+    b = bcx[..., :d.n_groups * d.d_state].reshape(B, S, d.n_groups, d.d_state)
+    c = bcx[..., d.n_groups * d.d_state:].reshape(B, S, d.n_groups, d.d_state)
+    dt_v = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["a_log"])
+
+    y, _ = ssd_chunked(xc, dt_v, a, b, c, dims.chunk)
+    y = y + params["d_skip"][None, None, :, None] * xc.astype(jnp.float32)
+    y = y.reshape(B, S, d.d_inner).astype(cdt)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["out_proj"].astype(cdt)

@@ -1,0 +1,498 @@
+"""Unified decoder-LM model covering all assigned architecture families.
+
+One ``LMConfig`` describes dense / MoE / SSM (Mamba-2) / hybrid (Hymba)
+decoder stacks.  The stack is driven by ``jax.lax.scan`` over stacked
+per-layer parameters so HLO size and compile time stay bounded for 100+
+layer models.  Modality frontends (audio frames, vision patches) are stubs:
+``embed_inputs=False`` configs take precomputed ``(B, S, d_model)``
+embeddings, per the assignment brief.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.ctx import hint
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEParallel:
+    """How to run the MoE layer under SPMD.
+
+    mode="auto": global-math einsum/scatter dispatch, XLA SPMD partitions it.
+    mode="shard_map": manual expert-parallel dispatch — experts sharded over
+    ``model_axis``, expert weights FSDP-sharded over ``fsdp_axes`` and
+    all-gathered per layer, hidden replicated over the model axis
+    (Megatron-TP style), partial outputs psum'd.
+    """
+    mode: str = "auto"
+    model_axis: str = "model"
+    fsdp_axes: Tuple[str, ...] = ()
+    mesh: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    block: str = "attn"               # "attn" | "ssm" | "hybrid"
+    qk_norm: bool = False
+    # sliding-window pattern, repeated over layers; 0 = global causal.
+    # gemma3: (W,W,W,W,W,0) — 5 local : 1 global.
+    window_pattern: Tuple[int, ...] = ()
+    rope_theta: float = 1e4
+    rope_theta_local: Optional[float] = None   # theta for windowed layers
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # SSM
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 64
+    ssm_groups: int = 1
+    # misc
+    embed_inputs: bool = True         # False => frontend stub feeds embeddings
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    embed_scale: bool = False         # gemma sqrt(d_model) embedding multiplier
+    max_seq_len: int = 131072
+    param_dtype: str = "float32"
+    activ_dtype: str = "float32"
+    remat: str = "none"               # "none" | "full" | "dots"
+    sub_quadratic: bool = False       # supports long_500k decode
+    unroll_layers: bool = False       # fully unroll the layer scan (cost probes)
+    block_local_attn: bool = False    # blocked O(S*W) sliding-window attention
+    seq_parallel_attn: bool = False   # SP attention (TP-unfriendly head counts)
+    kv_quant: bool = False            # int8 KV cache w/ per-token-head scales
+
+    @property
+    def local_block(self) -> int:
+        if not self.block_local_attn or not self.window_pattern:
+            return 0
+        locals_ = [w for w in self.window_pattern if w > 0]
+        return max(locals_) if locals_ else 0
+
+    # ------------------------------------------------------------------
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def adtype(self):
+        return jnp.dtype(self.activ_dtype)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def has_attn(self) -> bool:
+        return self.block in ("attn", "hybrid")
+
+    @property
+    def has_ssm(self) -> bool:
+        return self.block in ("ssm", "hybrid")
+
+    @property
+    def has_ffn(self) -> bool:
+        return self.d_ff > 0 or self.is_moe
+
+    @property
+    def ssm_dims(self) -> L.SSMDims:
+        return L.ssm_dims(self.d_model, self.ssm_state, self.ssm_head_dim,
+                          self.ssm_expand, self.ssm_chunk)
+
+    def layer_windows(self) -> jnp.ndarray:
+        if not self.window_pattern:
+            return jnp.zeros((self.n_layers,), jnp.int32)
+        pat = list(self.window_pattern)
+        reps = (self.n_layers + len(pat) - 1) // len(pat)
+        return jnp.array((pat * reps)[: self.n_layers], jnp.int32)
+
+    def layer_thetas(self) -> jnp.ndarray:
+        w = self.layer_windows()
+        local_theta = self.rope_theta_local or self.rope_theta
+        return jnp.where(w > 0, jnp.float32(local_theta), jnp.float32(self.rope_theta))
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for roofline MODEL_FLOPS)."""
+        d, V = self.d_model, self.vocab_size
+        n = 0
+        if self.embed_inputs:
+            n += V * d
+        if not self.tie_embeddings:
+            n += d * V
+        per_layer = d  # ln1
+        if self.has_attn:
+            per_layer += d * (self.n_heads + 2 * self.n_kv_heads) * self.d_head
+            per_layer += self.n_heads * self.d_head * d
+            if self.qk_norm:
+                per_layer += 2 * self.d_head
+        if self.has_ssm:
+            sd = self.ssm_dims
+            d_in = 2 * sd.d_inner + 2 * sd.n_groups * sd.d_state + sd.n_heads
+            conv_dim = sd.d_inner + 2 * sd.n_groups * sd.d_state
+            per_layer += d * d_in + sd.d_conv * conv_dim + conv_dim
+            per_layer += 3 * sd.n_heads + sd.d_inner + sd.d_inner * d
+        if self.has_ffn:
+            per_layer += d  # ln2
+            if self.is_moe:
+                per_layer += d * self.n_experts
+                per_layer += self.n_experts * 3 * d * self.d_ff
+                per_layer += self.n_shared_experts * 3 * d * self.d_ff
+            else:
+                per_layer += 3 * d * self.d_ff
+        n += self.n_layers * per_layer + d  # + final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed experts count)."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        dense_experts = self.moe_top_k + self.n_shared_experts
+        inactive = self.n_layers * (self.n_experts - self.moe_top_k) * 3 * d * self.d_ff
+        return self.param_count() - inactive
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: LMConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    dt = cfg.pdtype
+    p: Params = {"ln1": L.init_rmsnorm(cfg.d_model, dt)}
+    if cfg.has_attn:
+        p["attn"] = L.init_attention(keys[0], cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.d_head, cfg.qk_norm, dt)
+    if cfg.has_ssm:
+        p["ssm"] = L.init_ssm(keys[1], cfg.ssm_dims, dt)
+        if cfg.block == "hybrid":
+            p["mix"] = jnp.full((2,), 0.5, jnp.float32)
+    if cfg.has_ffn:
+        p["ln2"] = L.init_rmsnorm(cfg.d_model, dt)
+        if cfg.is_moe:
+            p["moe"] = L.init_moe(keys[2], cfg.d_model, cfg.n_experts, cfg.d_ff,
+                                  cfg.n_shared_experts, dt)
+        else:
+            p["mlp"] = L.init_mlp(keys[2], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_params(cfg: LMConfig, key) -> Params:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    p: Params = {}
+    if cfg.embed_inputs:
+        p["embed"] = L._embed_init(k_emb, (cfg.vocab_size, cfg.d_model), cfg.pdtype)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    p["layers"] = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    p["final_norm"] = L.init_rmsnorm(cfg.d_model, cfg.pdtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L._dense_init(k_head, (cfg.d_model, cfg.vocab_size), cfg.pdtype)
+    return p
+
+
+def init_abstract(cfg: LMConfig, key=None) -> Params:
+    """Shape/dtype skeleton of the params (no allocation) for dry-run lowering."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_params(cfg, k), key)
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _layer_forward(lp: Params, h: jnp.ndarray, cfg: LMConfig, window, theta,
+                   moe_parallel: Optional[MoEParallel], capacity: int):
+    aux = jnp.float32(0.0)
+    h = hint(h, "batch", None, "embed")
+    if cfg.has_attn and cfg.has_ssm:       # hybrid: parallel attn + ssm heads
+        hn = L.rmsnorm(lp["ln1"], h, cfg.norm_eps)
+        ao, _ = L.attention(lp["attn"], hn, n_heads=cfg.n_heads,
+                            n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+                            theta=theta, window=window, qk_norm=cfg.qk_norm,
+                            eps=cfg.norm_eps, local_block=cfg.local_block,
+                            seq_parallel=cfg.seq_parallel_attn)
+        so = L.ssm_apply(lp["ssm"], cfg.ssm_dims, hn)
+        mix = lp["mix"].astype(h.dtype)
+        h = h + mix[0] * ao + mix[1] * so
+    elif cfg.has_attn:
+        hn = L.rmsnorm(lp["ln1"], h, cfg.norm_eps)
+        ao, _ = L.attention(lp["attn"], hn, n_heads=cfg.n_heads,
+                            n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+                            theta=theta, window=window, qk_norm=cfg.qk_norm,
+                            eps=cfg.norm_eps, local_block=cfg.local_block,
+                            seq_parallel=cfg.seq_parallel_attn)
+        h = h + ao
+    else:                                   # pure SSM
+        hn = L.rmsnorm(lp["ln1"], h, cfg.norm_eps)
+        h = h + L.ssm_apply(lp["ssm"], cfg.ssm_dims, hn)
+
+    if cfg.has_ffn:
+        hn = L.rmsnorm(lp["ln2"], h, cfg.norm_eps)
+        if cfg.is_moe:
+            B, S, D = hn.shape
+            x2 = hn.reshape(B * S, D)
+            if moe_parallel is not None and moe_parallel.mode == "shard_map":
+                y2, aux = _moe_shard_map(lp["moe"], x2, cfg, moe_parallel, capacity)
+            else:
+                y2, aux = L.moe_apply_local(lp["moe"], x2, top_k=cfg.moe_top_k,
+                                            capacity=capacity,
+                                            n_experts=cfg.n_experts)
+            h = h + y2.reshape(B, S, D)
+        else:
+            h = h + L.mlp(lp["mlp"], hn)
+    return h, aux
+
+
+def _moe_shard_map(mp: Params, x2: jnp.ndarray, cfg: LMConfig,
+                   par: MoEParallel, capacity: int):
+    """Expert-parallel MoE: experts sharded over the model axis, expert weights
+    FSDP-sharded over fsdp_axes (all-gathered per use), hidden replicated over
+    the model axis, partial outputs psum'd over the model axis."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.smap import shard_map
+
+    mesh = par.mesh
+    model_ax = par.model_axis
+    fsdp = tuple(par.fsdp_axes)
+    n_model = mesh.shape[model_ax]
+    assert cfg.n_experts % n_model == 0, (cfg.n_experts, n_model)
+    e_local = cfg.n_experts // n_model
+    batch_axes = tuple(a for a in mesh.axis_names if a not in (model_ax,))
+    # capacity is per *local* token count: x2 is global here, the shard_map
+    # body sees T_global / prod(batch_axes) tokens.
+    n_batch_shards = 1
+    for a in batch_axes:
+        n_batch_shards *= mesh.shape[a]
+    t_local = max(1, x2.shape[0] // n_batch_shards)
+    capacity = moe_capacity(cfg, t_local)
+
+    def f(x_l, router, wg, wu, wd, shared):
+        if fsdp:
+            wg = lax.all_gather(wg, fsdp, axis=2, tiled=True)
+            wu = lax.all_gather(wu, fsdp, axis=2, tiled=True)
+            wd = lax.all_gather(wd, fsdp, axis=1, tiled=True)
+        start = lax.axis_index(model_ax) * e_local
+        params = {"router": router, "w_gate": wg, "w_up": wu, "w_down": wd}
+        if shared is not None:
+            params["shared"] = shared
+        y, aux = L.moe_apply_local(params, x_l, top_k=cfg.moe_top_k,
+                                   capacity=capacity, n_experts=cfg.n_experts,
+                                   expert_start=start, n_local_experts=e_local)
+        y = lax.psum(y, model_ax)
+        aux = lax.pmean(aux, mesh.axis_names)
+        return y, aux
+
+    shared = mp.get("shared")
+    tok_spec = P(batch_axes, None)
+    w_spec = P(model_ax, None, fsdp if fsdp else None)
+    wd_spec = P(model_ax, fsdp if fsdp else None, None)
+    shared_spec = (None if shared is None else
+                   {"w_gate": P(None, model_ax), "w_up": P(None, model_ax),
+                    "w_down": P(model_ax, None)})
+    y, aux = shard_map(
+        f, mesh=mesh,
+        in_specs=(tok_spec, P(), w_spec, w_spec, wd_spec, shared_spec),
+        out_specs=(tok_spec, P()),
+    )(x2, mp["router"], mp["w_gate"], mp["w_up"], mp["w_down"], shared)
+    return y, aux
+
+
+def moe_capacity(cfg: LMConfig, n_tokens: int) -> int:
+    """Per-expert token capacity for a global token count (static)."""
+    if not cfg.is_moe:
+        return 0
+    cap = int(math.ceil(n_tokens * cfg.moe_top_k * cfg.capacity_factor
+                        / cfg.n_experts))
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def forward(params: Params, cfg: LMConfig, inputs: jnp.ndarray,
+            moe_parallel: Optional[MoEParallel] = None) -> jnp.ndarray:
+    """Full-sequence forward -> final hidden states (B, S, D), aux loss.
+
+    ``inputs``: (B, S) int32 token ids when cfg.embed_inputs else
+    (B, S, d_model) precomputed embeddings (frontend stub).
+    """
+    adt = cfg.adtype
+    if cfg.embed_inputs:
+        h = params["embed"].astype(adt)[inputs]
+    else:
+        h = inputs.astype(adt)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), adt)
+    h = hint(h, "batch", None, "embed")
+
+    B, S = h.shape[0], h.shape[1]
+    capacity = moe_capacity(cfg, B * S)
+    windows = cfg.layer_windows()
+    thetas = cfg.layer_thetas()
+
+    def body(carry, xs):
+        lp, window, theta = xs
+        h, aux = carry
+        h, aux_l = _layer_forward(lp, h, cfg, window, theta, moe_parallel, capacity)
+        return (h, aux + aux_l), None
+
+    body_fn = body
+    if cfg.remat == "full":
+        body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    elif cfg.remat == "dots":
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    (h, aux), _ = lax.scan(body_fn, (h, jnp.float32(0.0)),
+                           (params["layers"], windows, thetas),
+                           unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return h, aux / cfg.n_layers
+
+
+def logits_fn(params: Params, cfg: LMConfig, hidden: jnp.ndarray) -> jnp.ndarray:
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return hint(hidden @ head.astype(hidden.dtype), "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches for decode
+# ---------------------------------------------------------------------------
+
+
+class DecodeState(NamedTuple):
+    """Stacked per-layer decode caches. Unused members are size-0 arrays."""
+    k_cache: jnp.ndarray       # (L, B, max_seq, n_kv, d_head)
+    v_cache: jnp.ndarray
+    k_scale: jnp.ndarray       # (L, B, max_seq, n_kv) — int8 KV quant scales
+    v_scale: jnp.ndarray       #   (size-0 when kv_quant is off)
+    conv_state: jnp.ndarray    # (L, B, d_conv-1, conv_dim)
+    ssm_state: jnp.ndarray     # (L, B, H, P, N)
+    length: jnp.ndarray        # () int32 — tokens already in cache
+
+
+def init_decode_state(cfg: LMConfig, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16, length: int = 0) -> DecodeState:
+    Lx = cfg.n_layers
+    if cfg.kv_quant:
+        dtype = jnp.int8
+    if cfg.has_attn:
+        kv_len = max_seq
+        if cfg.window_pattern and not any(w == 0 for w in cfg.window_pattern):
+            kv_len = min(max_seq, max(cfg.window_pattern))
+        k = jnp.zeros((Lx, batch, kv_len, cfg.n_kv_heads, cfg.d_head), dtype)
+        v = jnp.zeros_like(k)
+    else:
+        k = jnp.zeros((Lx, batch, 0, cfg.n_kv_heads, cfg.d_head), dtype)
+        v = jnp.zeros_like(k)
+    if cfg.kv_quant and cfg.has_attn:
+        ks = jnp.ones((Lx, batch, k.shape[2], cfg.n_kv_heads), jnp.float32)
+        vs = jnp.ones_like(ks)
+    else:
+        ks = jnp.zeros((Lx, batch, 0, 0), jnp.float32)
+        vs = jnp.zeros_like(ks)
+    if cfg.has_ssm:
+        sd = cfg.ssm_dims
+        conv_dim = sd.d_inner + 2 * sd.n_groups * sd.d_state
+        cdt = jnp.bfloat16 if cfg.kv_quant else dtype
+        conv = jnp.zeros((Lx, batch, sd.d_conv - 1, conv_dim), cdt)
+        ssm = jnp.zeros((Lx, batch, sd.n_heads, sd.head_dim, sd.d_state), jnp.float32)
+    else:
+        conv = jnp.zeros((Lx, batch, 0, 0), dtype)
+        ssm = jnp.zeros((Lx, batch, 0, 0, 0), jnp.float32)
+    return DecodeState(k, v, ks, vs, conv, ssm, jnp.asarray(length, jnp.int32))
+
+
+def decode_step(params: Params, cfg: LMConfig, state: DecodeState,
+                tokens: jnp.ndarray) -> Tuple[jnp.ndarray, DecodeState]:
+    """One decode step.  tokens: (B,) int32 (or (B, d_model) embeddings for
+    stub-frontend configs).  Returns (logits (B, V), new state)."""
+    adt = cfg.adtype
+    if cfg.embed_inputs:
+        h = params["embed"].astype(adt)[tokens][:, None, :]      # (B,1,D)
+    else:
+        h = tokens.astype(adt)[:, None, :]
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), adt)
+
+    windows = cfg.layer_windows()
+    thetas = cfg.layer_thetas()
+    capacity = moe_capacity(cfg, h.shape[0])
+
+    def body(carry, xs):
+        h, pos = carry
+        lp, window, theta, kc, vc, ks, vs, conv, ssm = xs
+        kv_cache = (kc, vc, ks, vs) if cfg.kv_quant else (kc, vc)
+        if cfg.has_attn and cfg.has_ssm:
+            hn = L.rmsnorm(lp["ln1"], h, cfg.norm_eps)
+            ao, cache = L.attention(
+                lp["attn"], hn, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                d_head=cfg.d_head, theta=theta, window=window, qk_norm=cfg.qk_norm,
+                eps=cfg.norm_eps, kv_cache=kv_cache, cache_len=pos)
+            so, conv, ssm = L.ssm_step(lp["ssm"], cfg.ssm_dims, hn[:, 0, :],
+                                       conv, ssm)
+            mix = lp["mix"].astype(h.dtype)
+            h = h + mix[0] * ao + mix[1] * so[:, None, :]
+        elif cfg.has_attn:
+            hn = L.rmsnorm(lp["ln1"], h, cfg.norm_eps)
+            ao, cache = L.attention(
+                lp["attn"], hn, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                d_head=cfg.d_head, theta=theta, window=window, qk_norm=cfg.qk_norm,
+                eps=cfg.norm_eps, kv_cache=kv_cache, cache_len=pos)
+            h = h + ao
+        else:
+            hn = L.rmsnorm(lp["ln1"], h, cfg.norm_eps)
+            so, conv, ssm = L.ssm_step(lp["ssm"], cfg.ssm_dims, hn[:, 0, :],
+                                       conv, ssm)
+            h = h + so[:, None, :]
+            cache = None
+        if cache is not None:
+            if cfg.kv_quant:
+                kc, vc, ks, vs = cache
+            else:
+                kc, vc = cache
+
+        if cfg.has_ffn:
+            hn = L.rmsnorm(lp["ln2"], h, cfg.norm_eps)
+            if cfg.is_moe:
+                B = hn.shape[0]
+                y2, _ = L.moe_apply_local(lp["moe"], hn.reshape(B, -1),
+                                          top_k=cfg.moe_top_k, capacity=capacity,
+                                          n_experts=cfg.n_experts)
+                h = h + y2.reshape(B, 1, -1)
+            else:
+                h = h + L.mlp(lp["mlp"], hn)
+        return (h, pos), (kc, vc, ks, vs, conv, ssm)
+
+    (h, _), (kc, vc, ks, vs, conv, ssm) = lax.scan(
+        body, (h, state.length),
+        (params["layers"], windows, thetas,
+         state.k_cache, state.v_cache, state.k_scale, state.v_scale,
+         state.conv_state, state.ssm_state),
+        unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = logits_fn(params, cfg, h)[:, 0, :]
+    new_state = DecodeState(kc, vc, ks, vs, conv, ssm, state.length + 1)
+    return logits, new_state

@@ -1,0 +1,95 @@
+"""AdamW in pure JAX, with optional low-precision first/second moments.
+
+For trillion-parameter configs (kimi-k2) the optimizer state dominates HBM;
+``state_dtype="bfloat16"`` halves it at negligible quality cost (the update
+math still runs in fp32).  State shardings mirror the parameter shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray           # () int32
+    m: Any                      # pytree like params
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(1.0, warmup)
+        prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale
+                                             ).astype(g.dtype), grads), gnorm
+
+
+def adamw_init(params, state_dtype: Optional[str] = None) -> AdamWState:
+    def zeros(p):
+        dt = jnp.dtype(state_dtype) if state_dtype else p.dtype
+        return jnp.zeros(p.shape, dt)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree_util.tree_map(zeros, params),
+                      v=jax.tree_util.tree_map(zeros, params))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1, max_grad_norm: float = 1.0
+                 ) -> Tuple[Any, AdamWState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+    b1c = 1 - b1 ** step.astype(jnp.float32)
+    b2c = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mhat = m32 / b1c
+        vhat = v32 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        # decoupled weight decay only on >=2D tensors (skip norms/scalars)
+        if p.ndim >= 2:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype)
+        return new_p, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr_t}
+
+
+def make_optimizer(lr=3e-4, state_dtype: Optional[str] = None, **kw) -> Optimizer:
+    return Optimizer(
+        init=lambda params: adamw_init(params, state_dtype),
+        update=lambda grads, state, params: adamw_update(
+            grads, state, params, lr=lr, **kw),
+    )

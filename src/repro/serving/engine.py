@@ -1,0 +1,138 @@
+"""Batched decode serving engine.
+
+Wave-based continuous batching: up to ``max_batch`` equal-length requests
+run as one wave (synthetic workloads use fixed prompt lengths; ragged
+admission is future work — the UFA control-plane behaviors below are the
+point).  The engine exposes exactly the hooks the UFA layer drives:
+
+  - ``block_tiers`` / ``unblock_tiers``: the §4.2 traffic-isolation analog —
+    requests of blocked tiers are refused at admission (fail-fast).
+  - ``preempt()``: drop the running wave (Restore-Later semantics) and
+    return its requests; KV caches are disposable on preemption, requests
+    re-prefill after restore (stateless-service assumption, DESIGN.md §2).
+  - per-tier served/rejected/preempted counters -> availability accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Dict, List, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiers import Tier
+from repro.models import (LMConfig, DecodeState, decode_step,
+                          init_decode_state)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tier: Tier
+    prompt: List[int]
+    max_new_tokens: int = 16
+    output: List[int] = dataclasses.field(default_factory=list)
+    state: str = "queued"     # queued|running|done|rejected|preempted
+
+
+class ServingEngine:
+    def __init__(self, cfg: LMConfig, params, max_batch: int = 8,
+                 max_seq: int = 256, cache_dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.cache_dtype = cache_dtype
+        self.blocked_tiers: Set[Tier] = set()
+        self.counters: Dict[str, Dict[Tier, int]] = {
+            k: defaultdict(int) for k in ("served", "rejected", "preempted")}
+        self.wave: List[Request] = []
+        self._state: Optional[DecodeState] = None
+        self._step = jax.jit(
+            lambda p, st, tok: decode_step(p, cfg, st, tok),
+            donate_argnums=(1,))
+        self.tokens_decoded = 0
+
+    # ------------------------------------------------------------------
+    def admit(self, reqs: List[Request]) -> List[Request]:
+        """Admission control: refuse blocked tiers, fill up to max_batch
+        with equal-length prompts, highest criticality first."""
+        accepted: List[Request] = []
+        for r in sorted(reqs, key=lambda r: r.tier):
+            if r.tier in self.blocked_tiers:
+                r.state = "rejected"
+                self.counters["rejected"][r.tier] += 1
+                continue
+            if len(accepted) >= self.max_batch:
+                r.state = "queued"
+                continue
+            if accepted and len(r.prompt) != len(accepted[0].prompt):
+                continue  # wave requires uniform prompt length
+            accepted.append(r)
+        if accepted:
+            self._start_wave(accepted)
+        return accepted
+
+    def _start_wave(self, reqs: List[Request]):
+        assert not self.wave, "wave already running"
+        self.wave = reqs
+        for r in reqs:
+            r.state = "running"
+        B = len(reqs)
+        self._state = init_decode_state(self.cfg, B, self.max_seq,
+                                        self.cache_dtype)
+        # prefill: feed prompt tokens (teacher-forced) through decode steps
+        prompts = jnp.asarray([r.prompt for r in reqs], jnp.int32)
+        for t in range(prompts.shape[1]):
+            logits, self._state = self._step(self.params, self._state,
+                                             prompts[:, t])
+        self._last_logits = logits
+
+    # ------------------------------------------------------------------
+    def decode_round(self) -> bool:
+        """One greedy decode step for the running wave.  Returns True while
+        the wave still has work."""
+        if not self.wave:
+            return False
+        next_tok = jnp.argmax(self._last_logits, axis=-1).astype(jnp.int32)
+        for i, r in enumerate(self.wave):
+            r.output.append(int(next_tok[i]))
+        self.tokens_decoded += len(self.wave)
+        done = all(len(r.output) >= r.max_new_tokens for r in self.wave)
+        if done or int(self._state.length) >= self.max_seq - 1:
+            for r in self.wave:
+                r.state = "done"
+                self.counters["served"][r.tier] += 1
+            self.wave = []
+            self._state = None
+            return False
+        self._last_logits, self._state = self._step(
+            self.params, self._state, next_tok)
+        return True
+
+    # ------------------------------------------------------------------
+    # UFA hooks
+    # ------------------------------------------------------------------
+    def block_tiers(self, tiers: Set[Tier]):
+        self.blocked_tiers |= set(tiers)
+
+    def unblock_tiers(self, tiers: Set[Tier]):
+        self.blocked_tiers -= set(tiers)
+
+    def preempt(self) -> List[Request]:
+        """Drop the running wave (UFA eviction); caches are discarded."""
+        dropped = self.wave
+        for r in dropped:
+            r.state = "preempted"
+            self.counters["preempted"][r.tier] += 1
+        self.wave = []
+        self._state = None
+        return dropped
+
+    def availability(self, tier: Tier) -> float:
+        s = self.counters["served"][tier]
+        rej = self.counters["rejected"][tier]
+        return s / max(1, s + rej)

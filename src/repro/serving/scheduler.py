@@ -1,0 +1,103 @@
+"""Tiered QoS request scheduler over one or more serving engines.
+
+Implements the UFA request-plane policy: strict tier priority with
+starvation-bounded aging, engine-level admission respecting blocked tiers,
+and failover hooks that (1) block preemptible-tier traffic, (2) preempt
+running non-critical waves so critical tiers get the capacity — the
+request-level mirror of the container-level orchestration in core/omg.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from collections import defaultdict
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.tiers import FailureClass, DEFAULT_CLASS_OF_TIER, Tier
+from repro.serving.engine import Request, ServingEngine
+
+
+class TieredScheduler:
+    def __init__(self, engines: Dict[str, ServingEngine],
+                 aging_rounds: int = 50):
+        self.engines = engines
+        self.aging_rounds = aging_rounds
+        self._q: List[Tuple[int, int, int, Request]] = []  # (tier, age, seq, r)
+        self._seq = itertools.count()
+        self.round = 0
+        self.failover_active = False
+
+    def submit(self, req: Request):
+        heapq.heappush(self._q, (int(req.tier), self.round, next(self._seq), req))
+
+    def _pop_wave(self, size: int, prompt_len: int) -> List[Request]:
+        taken, rest = [], []
+        while self._q and len(taken) < size:
+            tier, born, seq, r = heapq.heappop(self._q)
+            # starvation bound: promote ancient requests one tier
+            eff_tier = max(0, tier - (self.round - born) // self.aging_rounds)
+            if len(r.prompt) != prompt_len:
+                rest.append((eff_tier, born, seq, r))
+                continue
+            taken.append(r)
+        for item in rest:
+            heapq.heappush(self._q, item)
+        return taken
+
+    def tick(self) -> int:
+        """One scheduling round: keep engines busy, run one decode step.
+        Returns number of decode steps executed."""
+        self.round += 1
+        steps = 0
+        for engine in self.engines.values():
+            if not engine.wave and self._q:
+                plen = len(self._q[0][3].prompt)
+                wave = self._pop_wave(engine.max_batch, plen)
+                if wave:
+                    admitted = engine.admit(wave)
+                    for r in wave:
+                        if r.state == "queued":  # didn't fit this wave
+                            self.submit(r)
+            if engine.wave:
+                engine.decode_round()
+                steps += 1
+        return steps
+
+    # ------------------------------------------------------------------
+    # UFA failover integration
+    # ------------------------------------------------------------------
+    def enter_failover(self):
+        """Block preemptible tiers, preempt their running work, and requeue
+        nothing (Restore-Later requests fail fast until restoration)."""
+        self.failover_active = True
+        blocked = {t for t, fc in DEFAULT_CLASS_OF_TIER.items()
+                   if fc.preemptible}
+        for engine in self.engines.values():
+            engine.block_tiers(blocked)
+            if engine.wave and any(r.tier in blocked for r in engine.wave):
+                engine.preempt()
+        # drain queued blocked requests (fail fast, §4.2)
+        kept = []
+        while self._q:
+            tier, born, seq, r = heapq.heappop(self._q)
+            if r.tier in blocked:
+                r.state = "rejected"
+                for engine in self.engines.values():
+                    engine.counters["rejected"][r.tier] += 1
+                    break
+            else:
+                kept.append((tier, born, seq, r))
+        for item in kept:
+            heapq.heappush(self._q, item)
+
+    def exit_failover(self):
+        self.failover_active = False
+        blocked = {t for t, fc in DEFAULT_CLASS_OF_TIER.items()
+                   if fc.preemptible}
+        for engine in self.engines.values():
+            engine.unblock_tiers(blocked)
+
+    def queue_depth(self) -> int:
+        return len(self._q)

@@ -1,0 +1,9 @@
+from repro.train.train_step import (  # noqa: F401
+    TrainState,
+    chunked_ce_loss,
+    make_train_state,
+    make_train_state_abstract,
+    make_train_step,
+    make_prefill_step,
+    make_decode_fn,
+)

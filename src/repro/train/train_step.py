@@ -1,0 +1,116 @@
+"""Training / prefill / decode step factories.
+
+The loss is a vocab-shardable cross-entropy computed in sequence chunks under
+``jax.checkpoint`` so that full (B, S, V) logits are never live — for 256k
+vocab × 1M token batches the logits would otherwise dominate HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import (LMConfig, MoEParallel, decode_step, forward,
+                          init_params, logits_fn)
+from repro.optim import AdamWState, make_optimizer
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    step: jnp.ndarray   # () int32  (duplicate of opt.step; survives opt swaps)
+
+
+def chunked_ce_loss(params, cfg: LMConfig, hidden: jnp.ndarray,
+                    labels: jnp.ndarray, n_chunks: int = 8) -> jnp.ndarray:
+    """Mean token cross-entropy, computed over sequence chunks.
+
+    hidden: (B, S, D); labels: (B, S) int32.  Each chunk's logits are
+    rematerialized in the backward pass (jax.checkpoint), bounding live
+    logits to (B, S/n_chunks, V).
+    """
+    B, S, D = hidden.shape
+    while S % n_chunks != 0:
+        n_chunks -= 1
+    c = S // n_chunks
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+
+    from repro.dist.ctx import hint
+
+    @jax.checkpoint
+    def chunk_loss(h_c, y_c):
+        logits = (h_c @ head.astype(h_c.dtype)).astype(jnp.float32)  # (B,c,V)
+        logits = hint(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    # NOTE: a python loop (not lax.scan) so XLA cost analysis counts every
+    # chunk — while-loop bodies are only counted once by cost_analysis.
+    total = jnp.float32(0.0)
+    for i in range(n_chunks):
+        total = total + chunk_loss(hidden[:, i * c:(i + 1) * c, :],
+                                   labels[:, i * c:(i + 1) * c])
+    return total / (B * S)
+
+
+def make_train_step(cfg: LMConfig, optimizer=None,
+                    moe_parallel: Optional[MoEParallel] = None,
+                    aux_weight: float = 0.01, n_loss_chunks: int = 8):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    optimizer = optimizer or make_optimizer()
+
+    def loss_fn(params, batch):
+        h, aux = forward(params, cfg, batch["inputs"], moe_parallel)
+        ce = chunked_ce_loss(params, cfg, h, batch["labels"], n_loss_chunks)
+        loss = ce + (aux_weight * aux if cfg.is_moe else 0.0)
+        return loss, {"ce": ce, "aux": aux}
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch)
+        new_params, new_opt, om = optimizer.update(grads, state.opt, state.params)
+        metrics = {"loss": loss, **parts, **om}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step, optimizer
+
+
+def make_train_state_abstract(cfg: LMConfig, optimizer=None):
+    """Abstract (ShapeDtypeStruct) TrainState for dry-run lowering."""
+    optimizer = optimizer or make_optimizer()
+    def build(key):
+        p = init_params(cfg, key)
+        return TrainState(p, optimizer.init(p), jnp.zeros((), jnp.int32))
+    return jax.eval_shape(build, jax.random.PRNGKey(0))
+
+
+def make_train_state(cfg: LMConfig, key, optimizer=None) -> TrainState:
+    optimizer = optimizer or make_optimizer()
+    p = init_params(cfg, key)
+    return TrainState(p, optimizer.init(p), jnp.zeros((), jnp.int32))
+
+
+def make_prefill_step(cfg: LMConfig,
+                      moe_parallel: Optional[MoEParallel] = None):
+    """prefill_step(params, inputs) -> last-position logits (B, V).
+
+    Used for the inference-prefill dry-run shape: runs the full forward and
+    projects only the final position (production serving would also emit the
+    KV cache; the compute/memory profile is identical)."""
+
+    def prefill_step(params, inputs):
+        h, _ = forward(params, cfg, inputs, moe_parallel)
+        return logits_fn(params, cfg, h[:, -1:, :])[:, 0, :]
+
+    return prefill_step
+
+
+def make_decode_fn(cfg: LMConfig):
+    def serve_step(params, state, tokens):
+        return decode_step(params, cfg, state, tokens)
+    return serve_step

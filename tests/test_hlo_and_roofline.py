@@ -1,0 +1,82 @@
+"""HLO collective parser + roofline math unit tests."""
+
+import pytest
+
+from repro.launch.hlo_analysis import parse_collectives, collective_summary
+
+
+HLO = """
+HloModule jit_f
+  %all-gather = f32[256,128]{1,0} all-gather(%param.1), channel_id=1, replica_groups=[4,2]<=[2,4]T(1,0), dimensions={0}, use_global_device_ids=true
+  %dot = f32[8,128]{1,0} dot(%param, %all-gather), lhs_contracting_dims={1}
+  %all-reduce = f32[64]{0} all-reduce(%wrapped), channel_id=2, replica_groups=[2,4]<=[8], to_apply=%region_0.0
+  ROOT %all-reduce.1 = f32[] all-reduce(%all-reduce), channel_id=3, replica_groups=[4,2]<=[2,4]T(1,0), to_apply=%region_1
+  %reduce-scatter = bf16[16,8]{1,0} reduce-scatter(%x), replica_groups=[2,4]<=[8], dimensions={0}
+  %collective-permute-start = (f32[4], f32[4]) collective-permute-start(%y), source_target_pairs={{0,1}}
+  %cp2 = f32[4] collective-permute-done(%collective-permute-start)
+  %a2a = (f32[2,4]{1,0}, f32[2,4]{1,0}) all-to-all(%p, %q), replica_groups={{0,1},{2,3}}
+"""
+
+
+def test_parse_collectives_kinds_and_counts():
+    stats = parse_collectives(HLO)
+    assert stats["all-gather"]["count"] == 1
+    assert stats["all-reduce"]["count"] == 2
+    assert stats["reduce-scatter"]["count"] == 1
+    assert stats["collective-permute"]["count"] == 1   # -done skipped
+    assert stats["all-to-all"]["count"] == 1
+
+
+def test_parse_collectives_bytes():
+    stats = parse_collectives(HLO)
+    # all-gather result 256*128*4 bytes, group=2 -> operand = result/2
+    assert stats["all-gather"]["bytes"] == 256 * 128 * 4 / 2
+    # ring wire = (g-1)/g * result
+    assert stats["all-gather"]["wire_bytes"] == pytest.approx(
+        256 * 128 * 4 * 0.5)
+    # all-reduce payload 64*4 + scalar 4; wire 2*(g-1)/g
+    assert stats["all-reduce"]["bytes"] == 64 * 4 + 4
+    # reduce-scatter result bf16 16*8*2, group 4 -> operand x4
+    assert stats["reduce-scatter"]["bytes"] == 16 * 8 * 2 * 4
+    # all-to-all: tuple result summed, explicit groups of 2
+    assert stats["all-to-all"]["bytes"] == 2 * (2 * 4 * 4)
+
+
+def test_parser_ignores_non_collective_lines():
+    stats = parse_collectives("%dot = f32[8] dot(%a, %b)\n")
+    assert stats == {}
+
+
+def test_roofline_model_flops():
+    from repro.configs import get_arch
+    from repro.launch.roofline import decode_ideal_bytes, model_flops
+    arch = get_arch("llama3.2-3b")
+    n = arch.config.param_count()
+    assert model_flops(arch, "train_4k") == pytest.approx(
+        6.0 * n * 256 * 4096)
+    assert model_flops(arch, "decode_32k") == pytest.approx(2.0 * n * 128)
+    ib = decode_ideal_bytes(arch, "decode_32k")
+    assert ib > 2.0 * n                       # params + cache
+    # windowed arch touches less cache than a full-attention one of same size
+    gemma = get_arch("gemma3-4b")
+    full_equiv = (2 * 128 * 32768 * gemma.config.n_kv_heads
+                  * gemma.config.d_head * 2.0 * gemma.config.n_layers)
+    windowed = decode_ideal_bytes(gemma, "decode_32k") \
+        - 2.0 * gemma.config.param_count()
+    assert windowed < full_equiv * 0.4        # 5/6 layers are window-bounded
+
+
+def test_dryrun_artifacts_if_present():
+    """If the sweep has run, every artifact must be ok or a documented skip."""
+    import json
+    from pathlib import Path
+    art = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+    if not art.exists():
+        pytest.skip("dry-run artifacts not generated yet")
+    files = [p for p in art.glob("*.json") if "variant" not in p.name]
+    assert files
+    for p in files:
+        r = json.loads(p.read_text())
+        assert r["status"] in ("ok", "skipped"), (p.name, r.get("error"))
+        if r["status"] == "skipped":
+            assert "long_500k" in p.name

@@ -1,0 +1,99 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+SETTINGS = dict(deadline=None, max_examples=12)
+
+
+@pytest.mark.parametrize("S,H,d,window,dtype", [
+    (128, 2, 64, 0, jnp.float32),
+    (256, 4, 64, 64, jnp.float32),
+    (256, 1, 128, 100, jnp.float32),
+    (128, 2, 64, 0, jnp.bfloat16),
+])
+def test_flash_attention(S, H, d, window, dtype):
+    B = 2
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, d), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, d), dtype)
+    v = jax.random.normal(ks[2], (B, S, H, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, window=window)
+    want = ref.ref_flash_attention(q, k, v, causal=True, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@given(length=st.integers(1, 1024), window=st.sampled_from([0, 64, 300]),
+       kv=st.sampled_from([1, 2, 4]))
+@settings(**SETTINGS)
+def test_decode_attention_hypothesis(length, window, kv):
+    B, d, K = 2, 64, 1024
+    H = kv * 2
+    ks = jax.random.split(jax.random.PRNGKey(length), 3)
+    q = jax.random.normal(ks[0], (B, H, d))
+    kc = jax.random.normal(ks[1], (B, K, kv, d))
+    vc = jax.random.normal(ks[2], (B, K, kv, d))
+    out = ops.decode_attention(q, kc, vc, length, window, block_k=256)
+    want = ref.ref_decode_attention(q, kc, vc, length, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@given(S=st.sampled_from([64, 128]), chunk=st.sampled_from([16, 32, 64]),
+       H=st.sampled_from([1, 2, 4]), G_is_H=st.booleans())
+@settings(**SETTINGS)
+def test_ssd_scan_hypothesis(S, chunk, H, G_is_H):
+    B, P, N = 2, 16, 32
+    G = H if G_is_H else 1
+    ks = jax.random.split(jax.random.PRNGKey(S * chunk + H), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    b = jax.random.normal(ks[3], (B, S, G, N))
+    c = jax.random.normal(ks[4], (B, S, G, N))
+    y_k, s_k = ops.ssd_scan(x, dt, a, b, c, chunk=chunk)
+    from repro.models.layers import ssd_chunked
+    y_r, s_r = ssd_chunked(x, dt, a, b, c, chunk)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("E,C,D,F,dtype", [
+    (2, 128, 256, 128, jnp.float32),
+    (4, 256, 512, 256, jnp.float32),
+    (2, 128, 256, 128, jnp.bfloat16),
+])
+def test_grouped_matmul(E, C, D, F, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (E, C, D), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (E, D, F), dtype)
+    out = ops.grouped_matmul(x, w)
+    want = ref.ref_grouped_matmul(x, w)
+    tol = 2e-3 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@given(rows=st.integers(1, 64), d=st.sampled_from([128, 512, 1024]),
+       bf16=st.booleans())
+@settings(**SETTINGS)
+def test_rmsnorm_hypothesis(rows, d, bf16):
+    dtype = jnp.bfloat16 if bf16 else jnp.float32
+    x = jax.random.normal(jax.random.PRNGKey(rows + d), (rows, d), dtype)
+    s = jax.random.normal(jax.random.PRNGKey(1), (d,), dtype)
+    out = ops.rmsnorm(x, s)
+    want = ref.ref_rmsnorm(x, s)
+    tol = 1e-5 if not bf16 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)

@@ -1,0 +1,203 @@
+"""Model-family behaviour: forward/decode agreement, masking, MoE math."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (LMConfig, decode_step, forward, init_decode_state,
+                          init_params, logits_fn)
+from repro.models.layers import (moe_apply_local, moe_routing, ssd_chunked,
+                                 _expert_positions, _expert_positions_big)
+
+CFGS = {
+    "dense": LMConfig(name="d", n_layers=3, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_head=16, d_ff=128, vocab_size=97, qk_norm=True),
+    "windowed": LMConfig(name="w", n_layers=6, d_model=64, n_heads=4,
+                         n_kv_heads=2, d_head=16, d_ff=128, vocab_size=97,
+                         window_pattern=(4, 4, 4, 4, 4, 0), rope_theta_local=1e3),
+    "ssm": LMConfig(name="s", n_layers=2, d_model=64, n_heads=0, n_kv_heads=1,
+                    d_head=1, d_ff=0, vocab_size=97, block="ssm", ssm_state=16,
+                    ssm_head_dim=16, ssm_chunk=4),
+    "hybrid": LMConfig(name="h", n_layers=3, d_model=64, n_heads=4, n_kv_heads=2,
+                       d_head=16, d_ff=128, vocab_size=97, block="hybrid",
+                       ssm_state=8, ssm_head_dim=16, ssm_chunk=4,
+                       window_pattern=(4, 4, 0)),
+    "moe": LMConfig(name="m", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                    d_head=16, d_ff=96, vocab_size=97, n_experts=8, moe_top_k=2),
+}
+
+
+@pytest.mark.parametrize("fam", list(CFGS))
+def test_forward_shapes_no_nan(fam):
+    cfg = CFGS[fam]
+    p = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    h, aux = forward(p, cfg, toks)
+    logits = logits_fn(p, cfg, h)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+@pytest.mark.parametrize("fam", ["dense", "windowed", "ssm", "hybrid"])
+def test_decode_matches_forward(fam):
+    cfg = CFGS[fam]
+    S = 12
+    p = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(7), (2, S), 0, cfg.vocab_size)
+    h, _ = forward(p, cfg, toks)
+    lg_full = logits_fn(p, cfg, h)
+    st = init_decode_state(cfg, 2, S + 4, jnp.float32)
+    step = jax.jit(lambda st, t: decode_step(p, cfg, st, t))
+    outs = []
+    for t in range(S):
+        lg, st = step(st, toks[:, t])
+        outs.append(lg)
+    err = float(jnp.abs(lg_full - jnp.stack(outs, 1)).max())
+    assert err < 2e-3, err
+
+
+def test_blocked_local_attention_exact():
+    cfg = CFGS["windowed"]
+    cfgb = dataclasses.replace(cfg, block_local_attn=True)
+    p = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 32), 0, 97)
+    h1, _ = forward(p, cfg, toks)
+    h2, _ = forward(p, cfgb, toks)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_padded_heads_are_exact():
+    """TP head padding (q AND kv padded proportionally, zero weights for the
+    padded heads, zero wo rows) must not change outputs."""
+    cfg = dataclasses.replace(CFGS["dense"], qk_norm=False)
+    p = init_params(cfg, jax.random.PRNGKey(0))
+    cfg_pad = dataclasses.replace(cfg, n_heads=8, n_kv_heads=4)
+    p_pad = init_params(cfg_pad, jax.random.PRNGKey(1))
+    attn, attn_p = p["layers"]["attn"], p_pad["layers"]["attn"]
+    hd = cfg.d_head
+    for name, real in (("wq", cfg.n_heads), ("wk", cfg.n_kv_heads),
+                       ("wv", cfg.n_kv_heads)):
+        w = np.zeros(attn_p[name].shape, np.float32)
+        w[:, :, :real * hd] = np.asarray(attn[name])
+        attn_p[name] = jnp.asarray(w)
+    wo = np.zeros(attn_p["wo"].shape, np.float32)
+    wo[:, :cfg.n_heads * hd, :] = np.asarray(attn["wo"])
+    attn_p["wo"] = jnp.asarray(wo)
+    p_pad["embed"] = p["embed"]
+    p_pad["lm_head"] = p["lm_head"]
+    p_pad["final_norm"] = p["final_norm"]
+    for k in ("ln1", "ln2", "mlp"):
+        p_pad["layers"][k] = p["layers"][k]
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 8), 0, 97)
+    h1, _ = forward(p, cfg, toks)
+    h2, _ = forward(p_pad, cfg_pad, toks)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_ssd_chunked_matches_naive():
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 5)
+    B, S, H, P, G, N, chunk = 2, 32, 4, 8, 2, 16, 8
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    b = jax.random.normal(ks[3], (B, S, G, N))
+    c = jax.random.normal(ks[4], (B, S, G, N))
+    y, fs = ssd_chunked(x, dt, a, b, c, chunk)
+
+    bh = np.repeat(np.asarray(b), H // G, axis=2)
+    ch = np.repeat(np.asarray(c), H // G, axis=2)
+    st = np.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        dec = np.exp(np.asarray(dt)[:, t] * np.asarray(a)[None, :])
+        st = st * dec[..., None, None] + np.einsum(
+            "bh,bhp,bhn->bhpn", np.asarray(dt)[:, t], np.asarray(x)[:, t],
+            bh[:, t])
+        ys.append(np.einsum("bhpn,bhn->bhp", st, ch[:, t]))
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fs), st, rtol=1e-4, atol=1e-4)
+
+
+def test_moe_positions_variants_agree():
+    rng = np.random.default_rng(0)
+    top_e = jnp.asarray(rng.integers(0, 7, size=(50, 3)))
+    a = _expert_positions(top_e, 7)
+    b = _expert_positions_big(top_e, 7)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_moe_no_drop_equals_dense_mixture():
+    """With capacity >= T*k the dropped-MoE must equal the exact mixture."""
+    D, E, F, T, K = 16, 4, 24, 12, 2
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": jax.random.normal(ks[0], (D, E)),
+        "w_gate": jax.random.normal(ks[1], (E, D, F)) * 0.1,
+        "w_up": jax.random.normal(ks[2], (E, D, F)) * 0.1,
+        "w_down": jax.random.normal(ks[3], (E, F, D)) * 0.1,
+    }
+    x = jax.random.normal(ks[4], (T, D))
+    y, _ = moe_apply_local(params, x, top_k=K, capacity=T * K, n_experts=E)
+    w, e, _ = moe_routing(params["router"], x, K)
+    y_ref = np.zeros((T, D), np.float32)
+    for t in range(T):
+        for s in range(K):
+            ei = int(e[t, s])
+            g = np.asarray(x[t] @ params["w_gate"][ei])
+            u = np.asarray(x[t] @ params["w_up"][ei])
+            h = (g / (1 + np.exp(-g))) * u
+            y_ref[t] += float(w[t, s]) * (h @ np.asarray(params["w_down"][ei]))
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-3, atol=2e-3)
+
+
+def test_expert_sharded_moe_sums_to_full():
+    """Partial per-shard MoE outputs must sum to the unsharded result."""
+    D, E, F, T, K = 16, 6, 24, 10, 2
+    key = jax.random.PRNGKey(2)
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": jax.random.normal(ks[0], (D, E)),
+        "w_gate": jax.random.normal(ks[1], (E, D, F)) * 0.1,
+        "w_up": jax.random.normal(ks[2], (E, D, F)) * 0.1,
+        "w_down": jax.random.normal(ks[3], (E, F, D)) * 0.1,
+    }
+    x = jax.random.normal(ks[4], (T, D))
+    full, _ = moe_apply_local(params, x, top_k=K, capacity=T * K, n_experts=E)
+    acc = jnp.zeros_like(full)
+    for start in (0, 3):
+        shard = {k: (v[start:start + 3] if k != "router" else v)
+                 for k, v in params.items()}
+        part, _ = moe_apply_local(shard, x, top_k=K, capacity=T * K,
+                                  n_experts=E, expert_start=start,
+                                  n_local_experts=3)
+        acc = acc + part
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_kv_quant_decode_close_to_fp():
+    """int8 KV cache (per-token-head scales) must track fp decode closely."""
+    cfg = CFGS["dense"]
+    cfgq = dataclasses.replace(cfg, kv_quant=True)
+    p = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(7), (2, 10), 0, 97)
+    h, _ = forward(p, cfg, toks)
+    lg_full = logits_fn(p, cfg, h)
+    st = init_decode_state(cfgq, 2, 16, jnp.float32)
+    assert st.k_cache.dtype == jnp.int8
+    step = jax.jit(lambda st, t: decode_step(p, cfgq, st, t))
+    outs = []
+    for t in range(10):
+        lg, st = step(st, toks[:, t])
+        outs.append(lg)
+    err = float(jnp.abs(lg_full - jnp.stack(outs, 1)).max())
+    rel = err / float(jnp.abs(lg_full).max())
+    assert rel < 0.05, rel

@@ -1,0 +1,108 @@
+"""Orchestrator invariants (unit + hypothesis property tests)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.capacity import RegionCapacity
+from repro.core.omg import Orchestrator
+from repro.core.service import synthesize_fleet, unsafe_edges
+from repro.core.drills import (dependency_safety_certification,
+                               failover_certification, remediate)
+from repro.core.tiers import RTO_SECONDS, FailureClass
+
+
+def _orch(seed=1, scale=0.02):
+    fleet = synthesize_fleet(scale=scale, seed=seed)
+    region = RegionCapacity.for_fleet("r", fleet)
+    return fleet, Orchestrator(fleet, region, scale=scale)
+
+
+def test_nonpeak_failover_preempts_nothing():
+    fleet, orch = _orch()
+    rep = orch.failover(tv_failover=0.3)
+    assert rep.mode == "non-peak"
+    for s in orch.se.values():
+        assert s.placement != "down"
+        assert s.replicas_live > 0
+
+
+def test_peak_failover_sequence():
+    fleet, orch = _orch()
+    rep = orch.failover(tv_failover=1.0)
+    assert rep.mode == "peak"
+    assert rep.always_on_ok
+    assert rep.burst_full_at_s is not None and rep.burst_full_at_s < 20 * 60
+    assert rep.rl_rto_met
+    # Terminate stays down through the failover
+    for s in orch.se.values():
+        if s.spec.failure_class == FailureClass.TERMINATE:
+            assert s.placement == "down"
+        if s.spec.failure_class == FailureClass.ALWAYS_ON:
+            assert s.placement == "steady" and s.replicas_live > 0
+
+
+@given(seed=st.integers(0, 12))
+@settings(deadline=None, max_examples=8)
+def test_failover_invariants_property(seed):
+    fleet, orch = _orch(seed=seed)
+    phys = orch.region.steady.physical_cores
+    rep = orch.failover(tv_failover=1.0)
+    # 1. Always-On never preempted, scaled to 2x
+    for s in orch.se.values():
+        if s.spec.failure_class == FailureClass.ALWAYS_ON:
+            assert s.placement == "steady"
+            assert s.replicas_live >= s.spec.replicas
+    # 2. steady pool never over-allocated
+    assert orch.region.steady.stateless.used <= \
+        orch.region.steady.stateless.capacity + 1e-6
+    # 3. restore-later all restored within RTO
+    assert rep.rl_rto_met
+    for s in orch.se.values():
+        if s.spec.failure_class == FailureClass.RESTORE_LATER:
+            assert s.placement in ("burst", "cloud")
+    # 4. failback restores everything and releases resources
+    orch.failback()
+    for s in orch.se.values():
+        assert s.placement == "steady"
+        assert not s.locked
+        assert s.replicas_live == s.spec.replicas
+    assert orch.region.cloud.provisioned == 0
+    assert not orch.region.batch.converted
+
+
+def test_certification_requires_remediation():
+    fleet = synthesize_fleet(scale=0.05, seed=3)
+    assert unsafe_edges(fleet), "fixture must plant unsafe edges"
+    cert0 = failover_certification(fleet, scale=0.05)
+    assert not cert0.certified          # fail-close edges present
+    remediate(fleet, set(unsafe_edges(fleet)))
+    cert1 = failover_certification(fleet, scale=0.05)
+    assert cert1.certified
+    assert all(cert1.classes_ok.values())
+
+
+def test_blackhole_drill_finds_unsafe_services():
+    fleet = synthesize_fleet(scale=0.05, seed=3)
+    res = dependency_safety_certification(fleet, seed=0)
+    unsafe_callers = {c for c, _ in unsafe_edges(fleet)
+                      if fleet[c].failure_class.survives_failover}
+    flagged = {n for n, r in res.items() if not r.certified}
+    # every critical caller with an unsafe preemptible dep must fail the drill
+    for c in unsafe_callers:
+        spec = fleet[c]
+        if any(fleet[d].failure_class.preemptible
+               for d in spec.unsafe_deps()):
+            assert c in flagged
+    remediate(fleet, set(unsafe_edges(fleet)))
+    res2 = dependency_safety_certification(fleet, seed=0)
+    assert all(r.certified for r in res2.values())
+
+
+def test_up_tier_remediation_changes_class():
+    fleet = synthesize_fleet(scale=0.05, seed=3)
+    edges = set(unsafe_edges(fleet))
+    if not edges:
+        pytest.skip("no unsafe edges in fixture")
+    remediate(fleet, edges, strategy="up_tier")
+    for _, callee in edges:
+        assert fleet[callee].failure_class == FailureClass.ACTIVE_MIGRATE

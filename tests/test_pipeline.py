@@ -1,0 +1,69 @@
+"""Pipeline parallelism == sequential execution (subprocess, 2/4 stages)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(n_devices: int, code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+CODE = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax import lax
+    from repro.dist.pipeline import pipeline_apply
+    from repro.models import layers as L
+
+    N_STAGES = {n}
+    mesh = jax.make_mesh((N_STAGES,), ("pod",))
+    Lyr, D, F, B, S = 8, 32, 64, 8, 16
+    keys = jax.random.split(jax.random.PRNGKey(0), Lyr)
+    params = jax.vmap(lambda k: L.init_mlp(k, D, F))(keys)
+    # scale down so activations stay O(1) over 8 residual layers (otherwise
+    # fp32 noise on exploding values breaks any absolute tolerance)
+    params = jax.tree_util.tree_map(lambda a: a * 0.2, params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, D))
+
+    def one_layer(lp, h):
+        return h + L.mlp(lp, h)
+
+    def stage_fn(layers_local, h):
+        def body(h, lp):
+            return one_layer(lp, h), None
+        h, _ = lax.scan(body, h, layers_local)
+        return h
+
+    # sequential reference
+    ref = x
+    for i in range(Lyr):
+        lp = jax.tree_util.tree_map(lambda a: a[i], params)
+        ref = one_layer(lp, ref)
+
+    with mesh:
+        out = pipeline_apply(stage_fn, params, x, mesh=mesh,
+                             n_microbatches=4)
+    err = float(jnp.abs(out - ref).max())
+    rel = err / float(jnp.abs(ref).max())
+    print("ERR", rel)
+    assert rel < 1e-5, (err, rel)
+""")
+
+
+def test_pipeline_2_stages():
+    out = _run(2, CODE.format(n=2))
+    assert "ERR" in out
+
+
+def test_pipeline_4_stages():
+    out = _run(4, CODE.format(n=4))
+    assert "ERR" in out

