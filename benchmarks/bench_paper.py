@@ -3,13 +3,18 @@
 Each function reproduces the table/figure's quantity from this repo's
 implementation and returns CSV rows (name, us_per_call, derived) where
 ``derived`` carries the reproduced numbers next to the paper's claims.
+
+``fleet_scale`` and ``scenario_sweep`` exercise the vectorized FleetState
+engine: full paper scale (~22k service-environments) and a vmapped
+scenario ensemble with per-scenario SLA verdicts (recorded into the
+benchmark JSON via ``record_extra``).
 """
 
 from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import Row, timed
+from benchmarks.common import Row, record_extra, timed
 
 PAPER_SCALE = 0.05          # fleet synthesized at 5% of Uber's service count
 SEED = 7
@@ -281,6 +286,70 @@ def bench_canary_gate() -> List[Row]:
     return [("canary_gate", us, derived)]
 
 
+def bench_fleet_scale() -> List[Row]:
+    """Paper scale: ~22k service-environments (Table 3) synthesize and run
+    a full peak failover on the vectorized FleetState engine."""
+    from repro.core.capacity import RegionCapacity, provisioning_multiple
+    from repro.core.drills import certify_fleet_state
+    from repro.core.omg import Orchestrator
+    from repro.core.service import synthesize_fleet
+
+    def synth():
+        fs = synthesize_fleet(scale=1.0, seed=SEED, as_arrays=True)
+        fs.apply_ufa_target_classes()
+        return fs
+
+    us_synth, fs = timed(synth, repeat=1)
+
+    def run():
+        region = RegionCapacity.for_fleet("paper-scale", fs)
+        orch = Orchestrator(fs, region, scale=1.0)
+        rep = orch.failover(tv_failover=1.0)
+        orch.failback()
+        return region, rep
+
+    us_fo, (region, rep) = timed(run, repeat=1)
+    cert = certify_fleet_state(fs, seed=SEED)
+    total = float(fs.spec_cores.sum())
+    mult = provisioning_multiple(2 * total, region.steady.physical_cores)
+    under_30s = (us_synth + us_fo) / 1e6 < 30.0
+    derived = (f"services={fs.n} edges={fs.edges.n} "
+               f"synth+failover_s={(us_synth + us_fo)/1e6:.2f} "
+               f"under_30s={under_30s} ufa_mult={mult:.2f} "
+               f"ao_ok={rep.always_on_ok} rl_rto={rep.rl_rto_met} "
+               f"drill_flagged={cert['n_flagged']}/{cert['n_critical']} "
+               f"(paper: 22k SEs, 2x->1.3x goal)")
+    return [("fleet_scale_synthesis", us_synth,
+             f"services={fs.n} array-native path"),
+            ("fleet_scale_failover", us_fo, derived)]
+
+
+def bench_scenario_sweep() -> List[Row]:
+    """Scenario-ensemble driver: >= 256 failover variants (traffic mult x
+    preheat delay x burst availability x cloud quota) in one vmapped
+    sweep; per-scenario SLA verdicts land in the benchmark JSON."""
+    from repro.core.scenarios import (FleetAggregates, scenario_grid,
+                                      scenario_records, summarize_sweep,
+                                      sweep_scenarios)
+    from repro.core.service import synthesize_fleet
+
+    fs = synthesize_fleet(scale=1.0, seed=SEED, as_arrays=True)
+    fs.apply_ufa_target_classes()
+    agg = FleetAggregates.from_fleet_state(fs)
+    grid = scenario_grid()
+    sweep_scenarios(agg, grid)              # warm the jit cache
+    us, res = timed(sweep_scenarios, agg, grid, repeat=3)
+    s = summarize_sweep(res)
+    record_extra("scenario_sweep", {"summary": s,
+                                    "scenarios": scenario_records(res)})
+    derived = (f"scenarios={s['n_scenarios']} sla_ok={s['n_sla_ok']} "
+               f"avail_min={s['availability_min']:.4f} "
+               f"avail_mean={s['availability_mean']:.4f} "
+               f"worst_rl_min={s['worst_rl_done_min']:.1f} "
+               f"(ensemble certification, Basiri-style)")
+    return [("scenario_sweep_vmap", us, derived)]
+
+
 ALL = [
     bench_table1_tiers,
     bench_table2_rpc_matrix,
@@ -296,4 +365,6 @@ ALL = [
     bench_eviction_rates,
     bench_overcommit,
     bench_canary_gate,
+    bench_fleet_scale,
+    bench_scenario_sweep,
 ]

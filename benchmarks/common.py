@@ -3,9 +3,17 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+# structured payloads (per-scenario verdicts, ...) stashed by bench
+# functions and written alongside the CSV rows by run.py --json
+EXTRAS: Dict[str, object] = {}
+
+
+def record_extra(name: str, payload: object):
+    EXTRAS[name] = payload
 
 
 def timed(fn: Callable, *args, repeat: int = 3, **kw) -> Tuple[float, object]:

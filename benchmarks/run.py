@@ -1,5 +1,8 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV; --json additionally writes rows + structured extras (per-scenario
+# SLA verdicts, ...) for the perf trajectory (BENCH_*.json).
 import argparse
+import json
 import sys
 import traceback
 
@@ -9,10 +12,16 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark names")
     ap.add_argument("--no-kernels", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="alias for --no-kernels (the kernel benches "
+                    "dominate runtime) — the CI smoke configuration")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows + extras as JSON")
     args = ap.parse_args()
+    args.no_kernels = args.no_kernels or args.quick
 
     from benchmarks import bench_paper
-    from benchmarks.common import emit
+    from benchmarks.common import EXTRAS, emit
 
     suites = list(bench_paper.ALL)
     if not args.no_kernels:
@@ -20,17 +29,36 @@ def main() -> None:
         suites += bench_kernels.ALL
 
     print("name,us_per_call,derived")
+    all_rows = []
     failures = 0
     for fn in suites:
         if args.only and args.only not in fn.__name__:
             continue
         try:
-            emit(fn())
+            rows = fn()
+            emit(rows)
+            all_rows.extend(rows)
         except Exception as e:
             failures += 1
-            print(f"{fn.__name__},nan,ERROR {type(e).__name__}: {e}",
-                  file=sys.stdout)
+            err_row = (fn.__name__, float("nan"),
+                       f"ERROR {type(e).__name__}: {e}")
+            print(f"{err_row[0]},nan,{err_row[2]}", file=sys.stdout)
+            all_rows.append(err_row)
             traceback.print_exc(file=sys.stderr)
+
+    if args.json:
+        payload = {
+            # NaN (error rows) -> null: keep the artifact strict JSON
+            "rows": [{"name": n,
+                      "us_per_call": None if us != us else us,
+                      "derived": d}
+                     for n, us, d in all_rows],
+            "extras": EXTRAS,
+            "failures": failures,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -17,6 +17,27 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.tiers import (QOS_COOL_UTILIZATION, QOS_EVICT_UTILIZATION,
                               FailureClass, Tier, o_max)
 
+# region-sizing constants shared with the analytic scenario model
+DEFAULT_SLACK = 1.06               # fragmentation slack on steady sizing
+BATCH_CORES_PER_HOST = 120.0
+BATCH_BURST_HEADROOM = 1.35        # burst sized to hold (AM + RL) * this
+BATCH_PREEMPTIBLE_FRACTION = 0.9
+
+
+CLOUD_RATE_FLOOR = 10.0            # min cloud provisioning rate (cores/s)
+CLOUD_RATE_RL_DIVISOR = 1200.0     # rate scales with the RL footprint
+
+
+def default_cloud_quota(rl_cores: float) -> float:
+    """Cloud quota a region is provisioned with (§4.6 sizing rule).
+    Pure arithmetic — safe to call on jax tracers (scenario model)."""
+    return 0.5 * rl_cores + 100.0
+
+
+def default_cloud_rate(rl_cores: float) -> float:
+    """Cloud provisioning rate (cores/s) for a region's RL footprint."""
+    return max(CLOUD_RATE_FLOOR, rl_cores / CLOUD_RATE_RL_DIVISOR)
+
 
 @dataclasses.dataclass
 class PoolState:
@@ -74,7 +95,7 @@ class BatchCluster:
     name: str
     n_hosts: int
     cores_per_host: float
-    preemptible_fraction: float = 0.9
+    preemptible_fraction: float = BATCH_PREEMPTIBLE_FRACTION
     converted: bool = False
     burst: Optional[PoolState] = None
 
@@ -131,10 +152,12 @@ class RegionCapacity:
     cloud: CloudPool
 
     @classmethod
-    def for_fleet(cls, name: str, fleet: Dict[str, "object"],
-                  overcommit_factor: float = 1.5, slack: float = 1.06,
+    def for_fleet(cls, name: str, fleet: "object",
+                  overcommit_factor: float = 1.5,
+                  slack: float = DEFAULT_SLACK,
                   model: str = "ufa") -> "RegionCapacity":
-        """Size a region for a fleet of ServiceSpecs.
+        """Size a region for a fleet (a dict of ServiceSpecs, or a
+        ``FleetState`` whose class totals reduce in one pass).
 
         model="legacy": every tier gets a dedicated 2x buffer
             -> stateless = 2 * total_demand, no overcommit pool.
@@ -142,17 +165,20 @@ class RegionCapacity:
             (its failover lands in burst), preemptible classes run in the
             overcommit pool -> stateless = 2*AO + AM.
         """
-        ao = am = rl = tm = 0.0
-        for s in fleet.values():
-            fc = s.failure_class
-            if fc == FailureClass.ALWAYS_ON:
-                ao += s.cores
-            elif fc == FailureClass.ACTIVE_MIGRATE:
-                am += s.cores
-            elif fc == FailureClass.RESTORE_LATER:
-                rl += s.cores
-            else:
-                tm += s.cores
+        if hasattr(fleet, "class_core_totals"):      # FleetState fast path
+            ao, am, rl, tm = fleet.class_core_totals()
+        else:
+            ao = am = rl = tm = 0.0
+            for s in fleet.values():
+                fc = s.failure_class
+                if fc == FailureClass.ALWAYS_ON:
+                    ao += s.cores
+                elif fc == FailureClass.ACTIVE_MIGRATE:
+                    am += s.cores
+                elif fc == FailureClass.RESTORE_LATER:
+                    rl += s.cores
+                else:
+                    tm += s.cores
         if model == "legacy":
             stateless = 2.0 * (ao + am + rl + tm) * slack
             factor = 1.0
@@ -164,16 +190,17 @@ class RegionCapacity:
                 stateless, factor, rl + tm)
         n_hosts = max(4, math.ceil(stateless / 100.0))
         # burst must absorb AM (MBB) + RL (restore): batch sized accordingly
-        batch_cores = (am + rl) * 1.35 / 0.9
-        batch_hosts = max(2, math.ceil(batch_cores / 120.0))
+        batch_cores = (am + rl) * BATCH_BURST_HEADROOM \
+            / BATCH_PREEMPTIBLE_FRACTION
+        batch_hosts = max(2, math.ceil(batch_cores / BATCH_CORES_PER_HOST))
         return cls(
             name=name,
             steady=Cluster(f"{name}-steady", n_hosts=n_hosts,
                            cores_per_host=100.0, overcommit_factor=factor),
             batch=BatchCluster(f"{name}-batch", n_hosts=batch_hosts,
-                               cores_per_host=120.0),
-            cloud=CloudPool(quota_cores=0.5 * rl + 100.0,
-                            provision_rate_cores_per_s=max(10.0, rl / 1200.0)),
+                               cores_per_host=BATCH_CORES_PER_HOST),
+            cloud=CloudPool(quota_cores=default_cloud_quota(rl),
+                            provision_rate_cores_per_s=default_cloud_rate(rl)),
         )
 
 

@@ -6,40 +6,101 @@ Drives the full peak-failover sequence over the discrete-event loop:
   batch->burst conversion (preheat: evict batch jobs + prefetch images) ->
   MBB-migrate Active-Migrate into burst, city-by-city traffic shift ->
   Always-On in-place scale-up into freed headroom ->
-  Restore-Later restore in burst (+cloud as last resort) within 1h RTO ->
+  Restore-Later restore in burst (+cloud as last resort, honoring cloud
+  provisioning latency) within 1h RTO ->
   (operator-triggered) failback mirroring the MBB flow.
 
-The orchestrator operates on the synthesized fleet + RegionCapacity model
-and emits a timestamped metrics timeline from which the paper's Figures
-7-10 are reproduced.  Optional callbacks let the ML-serving layer execute
-*real* preemption / re-deployment of model workloads in the examples.
+The orchestrator is fully vectorized over a ``FleetState`` struct-of-arrays:
+every phase is a masked batch update and every snapshot a handful of array
+reductions, so a paper-scale fleet (~22k service-environments) fails over
+in well under a second of wall time.  ``orch.se`` exposes per-service views
+backed by the arrays for tests, examples and callbacks.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
-from repro.core.capacity import PoolState, RegionCapacity
+import numpy as np
+
+from repro.core.capacity import RegionCapacity
 from repro.core.events import EventLoop
+from repro.core.fleet_state import (AM, AO, PLACEMENT_BURST, PLACEMENT_CLOUD,
+                                    PLACEMENT_DOWN, PLACEMENT_NAMES,
+                                    PLACEMENT_STEADY, POOL_NONE,
+                                    POOL_OVERCOMMIT, POOL_STATELESS, RL, TM,
+                                    CODE_FCLASS, FleetState)
 from repro.core.service import ServiceSpec
 from repro.core.tiers import RTO_SECONDS, FailureClass, Tier
 from repro.core.traffic import FailoverModeDetector
 
 
-@dataclasses.dataclass
-class SEState:
-    """Runtime state of one service-environment in the surviving region."""
-    spec: ServiceSpec
-    placement: str = "steady"       # steady | burst | cloud | down
-    replicas_live: int = 0
-    locked: bool = False
-    traffic_enabled: bool = True
+def _first_fit(cores: np.ndarray, free: float) -> np.ndarray:
+    """Greedy first-fit in array order against ``free`` capacity.  Returns
+    the boolean take-mask.  The common all-fit case is one cumsum; the
+    overflow tail (rare — regions are sized so everything fits) falls back
+    to a scalar walk, matching per-item ``PoolState.alloc`` semantics."""
+    m = len(cores)
+    if m == 0:
+        return np.zeros(0, bool)
+    csum = np.cumsum(cores)
+    taken = csum <= free + 1e-9
+    k = int(np.count_nonzero(taken))
+    if k == m:
+        return taken
+    rem = free - (csum[k - 1] if k > 0 else 0.0)
+    for i in range(k, m):
+        if cores[i] <= rem + 1e-9:
+            taken[i] = True
+            rem -= cores[i]
+    return taken
+
+
+class SEView:
+    """Read view of one service-environment row (compat with the seed's
+    ``SEState`` object API: tests and examples read these attributes)."""
+
+    __slots__ = ("_fs", "_i", "_spec")
+
+    def __init__(self, fs: FleetState, i: int, spec: Optional[ServiceSpec]):
+        self._fs = fs
+        self._i = i
+        self._spec = spec
+
+    @property
+    def spec(self) -> ServiceSpec:
+        if self._spec is None:
+            fs, i = self._fs, self._i
+            self._spec = ServiceSpec(
+                name=fs.names[i], tier=Tier(int(fs.tier[i])),
+                failure_class=CODE_FCLASS[int(fs.fclass[i])],
+                cores_per_replica=float(fs.cores_per_replica[i]),
+                replicas=int(fs.replicas[i]))
+        return self._spec
+
+    @property
+    def placement(self) -> str:
+        return PLACEMENT_NAMES[self._fs.placement[self._i]]
+
+    @property
+    def replicas_live(self) -> int:
+        return int(self._fs.replicas_live[self._i])
+
+    @property
+    def locked(self) -> bool:
+        return bool(self._fs.locked[self._i])
+
+    @property
+    def traffic_enabled(self) -> bool:
+        return bool(self._fs.traffic_enabled[self._i])
 
     @property
     def cores_live(self) -> float:
-        return self.replicas_live * self.spec.cores_per_replica
+        return float(self._fs.cores_live[self._i])
+
+
+SEState = SEView   # seed-name compat
 
 
 @dataclasses.dataclass
@@ -55,6 +116,11 @@ class Timeline:
     def at(self, key: str) -> List[Tuple[float, float]]:
         return list(zip(self.t, self.series[key]))
 
+    def as_arrays(self) -> Dict[str, np.ndarray]:
+        out = {"t": np.asarray(self.t)}
+        out.update({k: np.asarray(v) for k, v in self.series.items()})
+        return out
+
 
 @dataclasses.dataclass
 class FailoverReport:
@@ -65,6 +131,7 @@ class FailoverReport:
     rl_restored_at_s: Optional[float] = None
     rl_rto_met: bool = False
     cloud_cores_used: float = 0.0
+    cloud_provision_s: float = 0.0     # provisioning latency spent (§4.6)
     always_on_ok: bool = True
     evictions_first_hour: int = 0
     notes: List[str] = dataclasses.field(default_factory=list)
@@ -84,12 +151,18 @@ class Orchestrator:
     CITY_WAVE_S = 30.0                   # city-group traffic moves
     TRAFFIC_MULTIPLIER = 2.0             # surviving region absorbs 2x
 
-    def __init__(self, fleet: Dict[str, ServiceSpec], region: RegionCapacity,
+    def __init__(self, fleet: Union[Dict[str, ServiceSpec], FleetState],
+                 region: RegionCapacity,
                  loop: Optional[EventLoop] = None, scale: float = 1.0,
                  on_evict: Optional[Callable] = None,
                  on_migrate: Optional[Callable] = None,
                  on_restore: Optional[Callable] = None):
-        self.fleet = fleet
+        if isinstance(fleet, FleetState):
+            self.fleet: Optional[Dict[str, ServiceSpec]] = None
+            self.fs = fleet
+        else:
+            self.fleet = fleet
+            self.fs = FleetState.from_specs(fleet)
         self.region = region
         self.loop = loop or EventLoop()
         self.scale = scale
@@ -98,43 +171,81 @@ class Orchestrator:
         self.on_restore = on_restore
         self.detector = FailoverModeDetector()
         self.timeline = Timeline()
-        self.se: Dict[str, SEState] = {}
+        self._se_views: Optional[Dict[str, SEView]] = None
         self._place_steady_state()
         self.report: Optional[FailoverReport] = None
         self._state = "steady"
+        self._cloud_ready_at = 0.0
+        self._pending_cloud = 0
+        self._rl_waves_done = False
+
+    # ------------------------------------------------------------------
+    @property
+    def se(self) -> Dict[str, SEView]:
+        """Per-service views over the arrays (lazy; tests/examples only)."""
+        if self._se_views is None:
+            get = self.fleet.get if self.fleet is not None else lambda _n: None
+            self._se_views = {
+                name: SEView(self.fs, i, get(name))
+                for i, name in enumerate(self.fs.names)}
+        return self._se_views
+
+    def _spec_of(self, i: int) -> ServiceSpec:
+        return self.se[self.fs.names[i]].spec
+
+    def _emit(self, cb: Optional[Callable], mask: np.ndarray):
+        if cb is None:
+            return
+        for i in np.flatnonzero(mask):
+            cb(self._spec_of(int(i)))
 
     # ------------------------------------------------------------------
     def _place_steady_state(self):
         """Steady state: Always-On/Active-Migrate in the stateless pool,
-        Restore-Later/Terminate opportunistically in the overcommit pool."""
-        for name, spec in self.fleet.items():
-            st = SEState(spec=spec, replicas_live=spec.replicas)
-            pool = (self.region.steady.overcommit
-                    if spec.failure_class.preemptible
-                    else self.region.steady.stateless)
-            ok = pool.alloc(st.cores_live)
-            if not ok:  # overflow -> stateless pool (fragmentation slack)
-                self.region.steady.stateless.alloc(st.cores_live)
-                st.placement = "steady"
-            self.se[name] = st
+        Restore-Later/Terminate opportunistically in the overcommit pool
+        (overflow spills into stateless fragmentation slack — tracked, so
+        eviction later frees the pool each SE actually occupies)."""
+        fs = self.fs
+        cores = fs.spec_cores
+        pre = fs.preemptible
+        fs.pool[:] = POOL_NONE
 
-    def _by_class(self, fc: FailureClass) -> List[SEState]:
-        return [s for s in self.se.values() if s.spec.failure_class == fc]
+        idx = np.flatnonzero(pre)
+        taken = _first_fit(cores[idx], self.region.steady.overcommit.free)
+        oc_idx = idx[taken]
+        fs.pool[oc_idx] = POOL_OVERCOMMIT
+        self.region.steady.overcommit.used += float(cores[oc_idx].sum())
 
+        overflow = np.zeros(fs.n, bool)
+        overflow[idx[~taken]] = True
+        sl_idx = np.flatnonzero(~pre | overflow)
+        taken_sl = _first_fit(cores[sl_idx], self.region.steady.stateless.free)
+        fs.pool[sl_idx[taken_sl]] = POOL_STATELESS
+        self.region.steady.stateless.used += float(cores[sl_idx[taken_sl]].sum())
+
+    # ------------------------------------------------------------------
     def class_cores(self, fc: FailureClass, placement: Optional[str] = None
                     ) -> float:
-        return sum(s.cores_live for s in self._by_class(fc)
-                   if placement is None or s.placement == placement)
+        return self.fs.class_cores(fc, placement)
 
     def class_envs(self, fc: FailureClass, placement: str) -> int:
-        return sum(1 for s in self._by_class(fc)
-                   if s.placement == placement and s.replicas_live > 0)
+        return self.fs.class_envs(fc, placement)
 
     def _snap(self, **extra):
+        fs = self.fs
         burst = (self.region.batch.burst.used
                  if self.region.batch.burst else 0.0)
         burst_cap = (self.region.batch.burst.capacity
                      if self.region.batch.burst else 0.0)
+        pl, fc = fs.placement, fs.fclass
+        down = pl == PLACEMENT_DOWN
+        live = fs.replicas_live > 0
+        steady_live = (pl == PLACEMENT_STEADY) & live
+
+        def envs(cmask, pcode):
+            return int(np.count_nonzero(cmask & (pl == pcode) & live))
+
+        rl_m, tm_m, am_m = fc == RL, fc == TM, fc == AM
         self.timeline.snap(
             self.loop.now,
             steady_used=self.region.steady.stateless.used,
@@ -142,35 +253,32 @@ class Orchestrator:
             burst_capacity=burst_cap,
             burst_used=burst,
             cloud_used=self.region.cloud.provisioned,
-            rl_t_steady=(self.class_envs(FailureClass.RESTORE_LATER, "steady")
-                         + self.class_envs(FailureClass.TERMINATE, "steady")),
-            rl_bursted=self.class_envs(FailureClass.RESTORE_LATER, "burst")
-            + self.class_envs(FailureClass.RESTORE_LATER, "cloud"),
-            rl_not_bursted=sum(
-                1 for s in self._by_class(FailureClass.RESTORE_LATER)
-                if s.placement == "down"),
-            terminated=sum(1 for s in self._by_class(FailureClass.TERMINATE)
-                           if s.placement == "down"),
-            am_steady=self.class_envs(FailureClass.ACTIVE_MIGRATE, "steady"),
-            am_bursted=self.class_envs(FailureClass.ACTIVE_MIGRATE, "burst"),
+            rl_t_steady=int(np.count_nonzero((rl_m | tm_m) & steady_live)),
+            rl_bursted=(envs(rl_m, PLACEMENT_BURST)
+                        + envs(rl_m, PLACEMENT_CLOUD)),
+            rl_not_bursted=int(np.count_nonzero(rl_m & down)),
+            terminated=int(np.count_nonzero(tm_m & down)),
+            am_steady=envs(am_m, PLACEMENT_STEADY),
+            am_bursted=envs(am_m, PLACEMENT_BURST),
             utilization=self._utilization(),
             **extra)
 
     def _utilization(self) -> float:
         # demand-weighted: live cores x traffic multiplier on critical SEs
+        fs = self.fs
         mult = self.TRAFFIC_MULTIPLIER if self._state != "steady" else 1.0
-        busy = 0.0
-        for s in self.se.values():
-            if s.placement in ("steady",):
-                demand = 0.62 if not s.spec.failure_class.preemptible else 0.35
-                m = mult if s.spec.failure_class.survives_failover else 1.0
-                busy += s.cores_live * demand * m
+        steady = fs.placement == PLACEMENT_STEADY
+        pre = fs.preemptible
+        demand = np.where(pre, 0.35, 0.62)
+        m = np.where(fs.survives, mult, 1.0)
+        busy = float((fs.cores_live * demand * m)[steady].sum())
         return min(1.0, busy / max(1.0, self.region.steady.physical_cores))
 
     # ------------------------------------------------------------------
     # Failover
     # ------------------------------------------------------------------
     def failover(self, tv_failover: float = 1.0) -> FailoverReport:
+        fs = self.fs
         mode = self.detector.mode(tv_failover)
         rep = FailoverReport(mode=mode, timeline=self.timeline)
         self.report = rep
@@ -188,31 +296,28 @@ class Orchestrator:
         # ---- peak mode ----
         t0 = self.loop.now
         # 1. lockdown
-        for s in self.se.values():
-            if s.spec.failure_class != FailureClass.ALWAYS_ON:
-                s.locked = True
+        fs.locked[fs.fclass != AO] = True
         self.loop.log("lockdown complete")
 
         # 2. immediate BBM eviction of Terminate + Restore-Later
         def evict_all():
-            n = 0
-            for s in self.se.values():
-                if s.spec.failure_class.preemptible and s.placement == "steady":
-                    freed = s.cores_live
-                    self.region.steady.overcommit.release(freed)
-                    self.region.steady.stateless.release(0.0)
-                    s.placement = "down"
-                    s.replicas_live = 0
-                    s.traffic_enabled = False
-                    n += 1
-                    if self.on_evict:
-                        self.on_evict(s.spec)
-            self.loop.log(f"BBM evicted {n} preemptible SEs")
+            mask = fs.preemptible & (fs.placement == PLACEMENT_STEADY)
+            cores = fs.cores_live
+            self.region.steady.overcommit.release(
+                float(cores[mask & (fs.pool == POOL_OVERCOMMIT)].sum()))
+            self.region.steady.stateless.release(
+                float(cores[mask & (fs.pool == POOL_STATELESS)].sum()))
+            fs.placement[mask] = PLACEMENT_DOWN
+            fs.replicas_live[mask] = 0
+            fs.traffic_enabled[mask] = False
+            fs.pool[mask] = POOL_NONE
+            self._emit(self.on_evict, mask)
+            self.loop.log(f"BBM evicted {int(mask.sum())} preemptible SEs")
             self._snap()
         self.loop.schedule(self.KILL_LATENCY_S, evict_all, "bbm-evict")
 
         # 3. batch -> burst conversion (preheat)
-        burst_pool_holder: Dict[str, PoolState] = {}
+        burst_pool_holder: Dict[str, object] = {}
 
         def start_conversion():
             pool = self.region.batch.convert()
@@ -241,27 +346,35 @@ class Orchestrator:
         self.loop.schedule(self.BATCH_EVICT_S + self.PREFETCH_S,
                            start_conversion, "burst-conversion")
 
-        # 4. MBB migration of Active-Migrate into burst
+        # 4. MBB migration of Active-Migrate into burst (masked waves)
         def migrate_am():
             pool = burst_pool_holder["pool"]
-            ams = [s for s in self._by_class(FailureClass.ACTIVE_MIGRATE)
-                   if s.placement == "steady"]
+            ams = np.flatnonzero((fs.fclass == AM)
+                                 & (fs.placement == PLACEMENT_STEADY))
             waves = [ams[i:i + self.MBB_PARALLELISM]
                      for i in range(0, len(ams), self.MBB_PARALLELISM)]
 
             def run_wave(idx):
                 def w():
-                    for s in waves[idx]:
-                        if not pool.alloc(s.cores_live):
-                            rep.notes.append(
-                                f"burst full; {s.spec.name} stays in steady")
-                            continue
-                        # make-before-break: new up, traffic re-pointed,
-                        # old instances terminated -> steady capacity freed
-                        self.region.steady.stateless.release(s.cores_live)
-                        s.placement = "burst"
-                        if self.on_migrate:
-                            self.on_migrate(s.spec)
+                    wave = waves[idx]
+                    cores = fs.cores_live[wave]
+                    taken = _first_fit(cores, pool.free)
+                    moved = wave[taken]
+                    pool.used += float(cores[taken].sum())
+                    # make-before-break: new up, traffic re-pointed,
+                    # old instances terminated -> steady capacity freed
+                    # (only for SEs actually accounted in the pool)
+                    self.region.steady.stateless.release(float(
+                        fs.cores_live[moved[fs.pool[moved]
+                                            == POOL_STATELESS]].sum()))
+                    fs.placement[moved] = PLACEMENT_BURST
+                    fs.pool[moved] = POOL_NONE
+                    for i in wave[~taken]:
+                        rep.notes.append(
+                            f"burst full; {fs.names[i]} stays in steady")
+                    if self.on_migrate is not None:
+                        for i in moved:
+                            self.on_migrate(self._spec_of(int(i)))
                     self._snap()
                     if idx + 1 < len(waves):
                         self.loop.schedule(self.MBB_WAVE_S, run_wave(idx + 1))
@@ -278,7 +391,8 @@ class Orchestrator:
 
         # 5. Always-On in-place expansion to absorb 2x traffic
         def scale_always_on():
-            need = self.class_cores(FailureClass.ALWAYS_ON) * \
+            ao_mask = fs.fclass == AO
+            need = float(fs.cores_live[ao_mask].sum()) * \
                 (self.TRAFFIC_MULTIPLIER - 1.0)
             got = self.region.steady.stateless.alloc(need)
             if not got:
@@ -289,52 +403,92 @@ class Orchestrator:
                     f"Always-On scale-up short by "
                     f"{need - self.region.steady.stateless.free:.0f} cores")
             else:
-                for s in self._by_class(FailureClass.ALWAYS_ON):
-                    s.replicas_live = int(
-                        s.replicas_live * self.TRAFFIC_MULTIPLIER)
+                fs.replicas_live[ao_mask] = (
+                    fs.replicas_live[ao_mask]
+                    * self.TRAFFIC_MULTIPLIER).astype(np.int64)
             self.loop.log("Always-On scaled for 2x traffic")
             self._snap()
 
-        # 6. Restore-Later restoration within 1h RTO (burst, then cloud)
+        # 6. Restore-Later restoration within 1h RTO (burst, then cloud —
+        #    cloud grants arrive after their provisioning delay, §4.6)
+        def finalize_rl():
+            rep.rl_restored_at_s = self.loop.now - t0
+            rep.rl_rto_met = (rep.rl_restored_at_s <=
+                              RTO_SECONDS[FailureClass.RESTORE_LATER])
+            rep.cloud_cores_used = self.region.cloud.provisioned
+            self.loop.log("Restore-Later restoration complete")
+
         def restore_rl():
             pool = burst_pool_holder["pool"]
-            rls = sorted((s for s in self._by_class(FailureClass.RESTORE_LATER)
-                          if s.placement == "down"),
-                         key=lambda s: s.spec.tier)
-            need = sum(s.cores_live or s.spec.cores for s in rls)
+            rls_idx = np.flatnonzero((fs.fclass == RL)
+                                     & (fs.placement == PLACEMENT_DOWN))
+            rls = rls_idx[np.argsort(fs.tier[rls_idx], kind="stable")]
+            spec_cores = fs.spec_cores
 
-            def restore_batch(idx):
+            def activate(items: np.ndarray, pcode: int):
+                fs.placement[items] = pcode
+                fs.replicas_live[items] = fs.replicas[items]
+                fs.traffic_enabled[items] = True
+                if self.on_restore is not None:
+                    for i in items:
+                        self.on_restore(self._spec_of(int(i)))
+
+            def restore_batch(start):
                 def w():
-                    i = idx
-                    count = 0
-                    while i < len(rls) and count < self.MBB_PARALLELISM:
-                        s = rls[i]
-                        cores = s.spec.cores
-                        if pool.alloc(cores):
-                            s.placement = "burst"
-                        else:
-                            granted = self.region.cloud.provision(cores)
-                            if granted < cores:
-                                rep.notes.append(
-                                    f"cloud quota exhausted at {s.spec.name}")
-                                break
-                            s.placement = "cloud"
-                        s.replicas_live = s.spec.replicas
-                        s.traffic_enabled = True
-                        if self.on_restore:
-                            self.on_restore(s.spec)
-                        i += 1
-                        count += 1
+                    wave = rls[start:start + self.MBB_PARALLELISM]
+                    cores = spec_cores[wave]
+                    taken = _first_fit(cores, pool.free)
+                    cloud_pos = np.flatnonzero(~taken)
+                    cloud_cores = cores[cloud_pos]
+                    quota_left = (self.region.cloud.quota_cores
+                                  - self.region.cloud.provisioned)
+                    granted = (np.cumsum(cloud_cores)
+                               <= quota_left + 1e-9) if len(cloud_pos) else \
+                        np.zeros(0, bool)
+                    broke = bool(len(cloud_pos)) and not granted.all()
+                    if broke:
+                        # the first cloud failure aborts the wave: nothing
+                        # after that SE (burst-eligible or not) is processed
+                        j = int(cloud_pos[int(np.argmin(granted))])
+                        rep.notes.append(
+                            f"cloud quota exhausted at {fs.names[wave[j]]}")
+                        wave, cores, taken = wave[:j], cores[:j], taken[:j]
+                        cloud_pos = np.flatnonzero(~taken)
+                    count = len(wave)
+                    # burst restores are immediate
+                    pool.used += float(cores[taken].sum())
+                    activate(wave[taken], PLACEMENT_BURST)
+                    # cloud restores wait for provisioning
+                    if len(cloud_pos):
+                        base = max(self.loop.now, self._cloud_ready_at)
+                        items = wave[cloud_pos]
+                        for i in items:
+                            dt = self.region.cloud.provision_time(
+                                spec_cores[i])
+                            self.region.cloud.provision(spec_cores[i])
+                            base += dt
+                            rep.cloud_provision_s += dt
+                        self._cloud_ready_at = base
+                        self._pending_cloud += 1
+
+                        def arrive(items=items):
+                            activate(items, PLACEMENT_CLOUD)
+                            self._pending_cloud -= 1
+                            self._snap()
+                            if self._pending_cloud == 0 and \
+                                    self._rl_waves_done:
+                                finalize_rl()
+                        self.loop.schedule(base - self.loop.now, arrive,
+                                           "cloud-provision")
                     self._snap()
-                    if i < len(rls) and count > 0:
+                    nxt = start + count
+                    if nxt < len(rls) and count > 0:
                         self.loop.schedule(self.RL_RESTORE_WAVE_S,
-                                           restore_batch(i))
+                                           restore_batch(nxt))
                     else:
-                        rep.rl_restored_at_s = self.loop.now - t0
-                        rep.rl_rto_met = (rep.rl_restored_at_s <=
-                                          RTO_SECONDS[FailureClass.RESTORE_LATER])
-                        rep.cloud_cores_used = self.region.cloud.provisioned
-                        self.loop.log("Restore-Later restoration complete")
+                        self._rl_waves_done = True
+                        if self._pending_cloud == 0:
+                            finalize_rl()
                 return w
             self.loop.schedule(self.RL_RESTORE_WAVE_S, restore_batch(0))
 
@@ -345,38 +499,48 @@ class Orchestrator:
     # ------------------------------------------------------------------
     def failback(self) -> None:
         """Operator-triggered recovery (paper §4.7 / Fig 6)."""
+        fs = self.fs
         self._state = "failback"
-        t0 = self.loop.now
         self.loop.log("failback start")
 
         def move_back():
-            for s in self.se.values():
-                if s.placement in ("burst", "cloud"):
-                    pool = (self.region.steady.overcommit
-                            if s.spec.failure_class.preemptible
-                            else self.region.steady.stateless)
-                    pool.alloc(s.spec.cores)
-                    s.placement = "steady"
-                    s.replicas_live = s.spec.replicas
-                if s.spec.failure_class == FailureClass.ALWAYS_ON:
-                    s.replicas_live = s.spec.replicas  # shrink to 1x
+            away = ((fs.placement == PLACEMENT_BURST)
+                    | (fs.placement == PLACEMENT_CLOUD))
+            cores = fs.spec_cores
+            for group, pool, code in (
+                    (away & fs.preemptible, self.region.steady.overcommit,
+                     POOL_OVERCOMMIT),
+                    (away & ~fs.preemptible, self.region.steady.stateless,
+                     POOL_STATELESS)):
+                idx = np.flatnonzero(group)
+                taken = _first_fit(cores[idx], pool.free)
+                pool.used += float(cores[idx[taken]].sum())
+                fs.pool[idx[taken]] = code
+                fs.pool[idx[~taken]] = POOL_NONE
+            fs.placement[away] = PLACEMENT_STEADY
+            fs.replicas_live[away] = fs.replicas[away]
+            ao_mask = fs.fclass == AO
+            fs.replicas_live[ao_mask] = fs.replicas[ao_mask]  # shrink to 1x
             self._snap()
 
         def reenable_terminate():
-            for s in self._by_class(FailureClass.TERMINATE):
-                if s.placement == "down":
-                    s.placement = "steady"
-                    s.replicas_live = s.spec.replicas
-                    s.traffic_enabled = True
-                    self.region.steady.overcommit.alloc(s.cores_live)
+            mask = (fs.fclass == TM) & (fs.placement == PLACEMENT_DOWN)
+            fs.placement[mask] = PLACEMENT_STEADY
+            fs.replicas_live[mask] = fs.replicas[mask]
+            fs.traffic_enabled[mask] = True
+            idx = np.flatnonzero(mask)
+            cores = fs.cores_live
+            taken = _first_fit(cores[idx], self.region.steady.overcommit.free)
+            self.region.steady.overcommit.used += float(cores[idx[taken]].sum())
+            fs.pool[idx[taken]] = POOL_OVERCOMMIT
+            fs.pool[idx[~taken]] = POOL_NONE
             self._snap()
 
         def release_resources():
             # wait until 40% of batch capacity is freed before batch resumes
             self.region.batch.release()
             self.region.cloud.release_all()
-            for s in self.se.values():
-                s.locked = False
+            fs.locked[:] = False
             self._state = "steady"
             self.loop.log("failback complete; locks released")
             self._snap()

@@ -1,0 +1,233 @@
+"""Scenario-ensemble failover analysis (vmapped analytic capacity model).
+
+Resilience claims need *ensembles* of failure scenarios, not one trace
+(Basiri et al., chaos engineering): this module closes the loop by
+evaluating the UFA failover capacity model over a grid of scenario
+parameters in one ``jax.vmap`` — per-scenario SLA verdicts and an
+availability estimate for hundreds/thousands of variants in milliseconds.
+
+The analytic model mirrors the discrete-event orchestrator's arithmetic
+(same sizing rules, same wave/ramp constants) but collapses time to the
+closed-form completion points, which is what makes it vmappable.
+
+Scenario axes:
+  traffic_mult        surviving-region traffic multiplier (paper: 2.0)
+  burst_delay_s       preheat delay before burst capacity starts ramping
+  burst_availability  fraction of batch capacity actually convertible
+  cloud_quota_frac    multiplier on the region's cloud quota
+  overcommit_factor   host-level overcommit (paper: 1.5, O_max 1.66)
+  evict_fraction      fraction of preemptible demand actually evicted
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import capacity as C
+from repro.core.fleet_state import FleetState
+from repro.core.omg import Orchestrator
+from repro.core.tiers import QOS_EVICT_UTILIZATION, RTO_SECONDS, FailureClass
+
+# single-source constants: orchestrator tunables + region-sizing rules —
+# retuning either automatically retunes the scenario certification
+_SLACK = C.DEFAULT_SLACK
+_SPAWN_CORES_PER_HOST_S = Orchestrator.SPAWN_CORES_PER_HOST_S
+_BATCH_CORES_PER_HOST = C.BATCH_CORES_PER_HOST
+_MBB_WAVE_S = Orchestrator.MBB_WAVE_S
+_MBB_PARALLELISM = Orchestrator.MBB_PARALLELISM
+_RL_WAVE_S = Orchestrator.RL_RESTORE_WAVE_S
+_PREHEAT_S = Orchestrator.BATCH_EVICT_S + Orchestrator.PREFETCH_S
+_RL_RTO_S = RTO_SECONDS[FailureClass.RESTORE_LATER]
+_QOS_EVICT = QOS_EVICT_UTILIZATION
+_BASE_AVAILABILITY = 0.9997
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetAggregates:
+    """Class-level core/env totals — all the analytic model needs."""
+    ao_cores: float
+    am_cores: float
+    rl_cores: float
+    tm_cores: float
+    am_envs: int
+    rl_envs: int
+
+    @property
+    def total_cores(self) -> float:
+        return self.ao_cores + self.am_cores + self.rl_cores + self.tm_cores
+
+    @classmethod
+    def from_fleet_state(cls, fs: FleetState) -> "FleetAggregates":
+        from repro.core.fleet_state import AM, RL
+        ao, am, rl, tm = fs.class_core_totals()
+        return cls(ao_cores=ao, am_cores=am, rl_cores=rl, tm_cores=tm,
+                   am_envs=int(np.count_nonzero(fs.fclass == AM)),
+                   rl_envs=int(np.count_nonzero(fs.fclass == RL)))
+
+    @classmethod
+    def from_fleet(cls, fleet: Dict[str, "object"]) -> "FleetAggregates":
+        fs = FleetState.from_specs(fleet)
+        return cls.from_fleet_state(fs)
+
+
+def scenario_grid(traffic_mult=(1.6, 1.8, 2.0, 2.2),
+                  burst_delay_s=(180.0, 270.0, 360.0, 600.0),
+                  burst_availability=(1.0, 0.85, 0.7, 0.5),
+                  cloud_quota_frac=(1.0, 0.5, 0.25, 0.0),
+                  overcommit_factor=(1.5,),
+                  evict_fraction=(1.0,)) -> Dict[str, np.ndarray]:
+    """Cartesian scenario grid, flattened to parallel parameter arrays
+    (defaults: 4^4 = 256 variants around the paper's operating point)."""
+    axes = dict(traffic_mult=traffic_mult, burst_delay_s=burst_delay_s,
+                burst_availability=burst_availability,
+                cloud_quota_frac=cloud_quota_frac,
+                overcommit_factor=overcommit_factor,
+                evict_fraction=evict_fraction)
+    rows = list(itertools.product(*axes.values()))
+    cols = np.asarray(rows, np.float64).T
+    return {k: cols[i] for i, k in enumerate(axes)}
+
+
+def _scenario_outcome(consts: Dict[str, jnp.ndarray], p: Dict[str, jnp.ndarray]):
+    """SLA outcome of ONE scenario (all scalars — vmapped over the grid)."""
+    ao, am = consts["ao"], consts["am"]
+    rl, tm = consts["rl"], consts["tm"]
+    am_envs, rl_envs = consts["am_envs"], consts["rl_envs"]
+
+    mult = p["traffic_mult"]
+    oc = p["overcommit_factor"]
+    evict = p["evict_fraction"]
+
+    # region sizing (same rule as RegionCapacity.for_fleet, model="ufa")
+    stateless = (2.0 * ao + am) * _SLACK
+    oc_cap = stateless * (oc - 1.0)
+    preempt_resident = (rl + tm) * (1.0 - evict)
+    preempt_fit = preempt_resident <= oc_cap + 1e-6
+
+    # batch -> burst conversion (same sizing rule as for_fleet)
+    batch_cores = (am + rl) * C.BATCH_BURST_HEADROOM \
+        / C.BATCH_PREEMPTIBLE_FRACTION
+    burst_cap = (batch_cores * C.BATCH_PREEMPTIBLE_FRACTION
+                 * p["burst_availability"])
+    spawn_rate = _SPAWN_CORES_PER_HOST_S * batch_cores / _BATCH_CORES_PER_HOST
+    burst_full_s = p["burst_delay_s"] + burst_cap / jnp.maximum(spawn_rate,
+                                                                1e-9)
+
+    # Active-Migrate MBB into burst
+    am_in_burst = jnp.minimum(am, burst_cap)
+    am_waves = jnp.ceil(am_envs / _MBB_PARALLELISM)
+    am_done_s = burst_full_s + am_waves * _MBB_WAVE_S
+    am_stranded = am - am_in_burst            # stays in steady if burst full
+
+    # Always-On in-place scale-up into freed headroom
+    free_after_am = stateless - ao - am + am_in_burst
+    ao_need = ao * (mult - 1.0)
+    ao_short = jnp.maximum(0.0, ao_need - free_after_am)
+    ao_ok = ao_short <= 1e-6
+
+    # Restore-Later: burst first, cloud (with provisioning latency) last
+    burst_left = jnp.maximum(0.0, burst_cap - am_in_burst)
+    rl_need = rl * evict                      # evicted RL demand to restore
+    rl_in_burst = jnp.minimum(rl_need, burst_left)
+    cloud_need = rl_need - rl_in_burst
+    quota = C.default_cloud_quota(rl) * p["cloud_quota_frac"]
+    cloud_grant = jnp.minimum(cloud_need, quota)
+    rl_down = cloud_need - cloud_grant
+    # default_cloud_rate via its constants (python max() is not trace-safe)
+    cloud_rate = jnp.maximum(C.CLOUD_RATE_FLOOR,
+                             rl / C.CLOUD_RATE_RL_DIVISOR)
+    cloud_delay = cloud_grant / cloud_rate
+    rl_waves = jnp.ceil(rl_envs / _MBB_PARALLELISM)
+    rl_done_s = burst_full_s + rl_waves * _RL_WAVE_S + cloud_delay
+    rl_ok = (rl_down <= 1e-6) & (rl_done_s <= _RL_RTO_S)
+
+    # surviving-region utilization at the post-migration peak
+    busy = (ao * mult * 0.62 + am_in_burst * 0.0
+            + am_stranded * 0.62 * mult + preempt_resident * 0.35)
+    util_peak = busy / jnp.maximum(stateless, 1.0)
+    util_ok = util_peak <= _QOS_EVICT
+
+    # availability estimate: AO shortfall bites immediately; unrestored RL
+    # degrades the fraction of critical flows that (safely) depend on it
+    crit = jnp.maximum(ao + am, 1.0)
+    rl_exposure = 0.1 * rl_down / jnp.maximum(rl, 1.0)
+    window_frac = jnp.minimum(1.0, rl_done_s / _RL_RTO_S)
+    availability = (_BASE_AVAILABILITY
+                    - 0.5 * ao_short / crit
+                    - rl_exposure * window_frac
+                    - jnp.where(util_ok, 0.0, 1e-4))
+    availability = jnp.clip(availability, 0.0, 1.0)
+
+    sla_ok = (ao_ok & rl_ok & preempt_fit
+              & (am_done_s <= 30.0 * 60.0)
+              & (burst_full_s <= 20.0 * 60.0) & util_ok)
+    return {
+        "burst_full_s": burst_full_s,
+        "am_done_s": am_done_s,
+        "rl_done_s": rl_done_s,
+        "rl_down_cores": rl_down,
+        "cloud_grant_cores": cloud_grant,
+        "cloud_delay_s": cloud_delay,
+        "util_peak": util_peak,
+        "ao_ok": ao_ok,
+        "rl_ok": rl_ok,
+        "preempt_fit": preempt_fit,
+        "util_ok": util_ok,
+        "availability": availability,
+        "sla_ok": sla_ok,
+    }
+
+
+# compiled once per (grid-shape, consts-structure); reused across sweeps
+_sweep_jit = jax.jit(jax.vmap(_scenario_outcome, in_axes=(None, 0)))
+
+
+def sweep_scenarios(agg: FleetAggregates,
+                    grid: Optional[Dict[str, np.ndarray]] = None
+                    ) -> Dict[str, np.ndarray]:
+    """Evaluate the failover model over every scenario in one vmap."""
+    grid = grid if grid is not None else scenario_grid()
+    consts = {"ao": jnp.asarray(agg.ao_cores, jnp.float32),
+              "am": jnp.asarray(agg.am_cores, jnp.float32),
+              "rl": jnp.asarray(agg.rl_cores, jnp.float32),
+              "tm": jnp.asarray(agg.tm_cores, jnp.float32),
+              "am_envs": jnp.asarray(agg.am_envs, jnp.float32),
+              "rl_envs": jnp.asarray(agg.rl_envs, jnp.float32)}
+    params = {k: jnp.asarray(v, jnp.float32) for k, v in grid.items()}
+    out = _sweep_jit(consts, params)
+    result = {k: np.asarray(v) for k, v in out.items()}
+    result.update({k: np.asarray(v) for k, v in grid.items()})
+    return result
+
+
+def summarize_sweep(result: Dict[str, np.ndarray]) -> Dict[str, object]:
+    n = len(result["sla_ok"])
+    ok = int(result["sla_ok"].sum())
+    return {
+        "n_scenarios": n,
+        "n_sla_ok": ok,
+        "sla_ok_fraction": ok / max(1, n),
+        "availability_min": float(result["availability"].min()),
+        "availability_mean": float(result["availability"].mean()),
+        "worst_rl_done_min": float(result["rl_done_s"].max() / 60.0),
+        "worst_util_peak": float(result["util_peak"].max()),
+    }
+
+
+def scenario_records(result: Dict[str, np.ndarray]) -> list:
+    """Per-scenario verdict rows (JSON-serializable) for the bench log."""
+    keys = ["traffic_mult", "burst_delay_s", "burst_availability",
+            "cloud_quota_frac", "overcommit_factor", "evict_fraction",
+            "burst_full_s", "rl_done_s", "util_peak", "availability",
+            "ao_ok", "rl_ok", "util_ok", "sla_ok"]
+    n = len(result["sla_ok"])
+    return [{k: (bool(result[k][i]) if result[k].dtype == bool
+                 else round(float(result[k][i]), 6)) for k in keys}
+            for i in range(n)]

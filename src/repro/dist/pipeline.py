@@ -1,0 +1,63 @@
+"""GPipe-style pipeline parallelism over a mesh axis.
+
+Layers are stacked on a leading axis and split contiguously across the
+pipeline stages; microbatches stream through a ppermute ring.  Bubbles
+execute as wasted (masked) compute — the SPMD program is identical on
+every device, which is what keeps XLA happy.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.smap import shard_map
+
+
+def pipeline_apply(stage_fn, params, x, *, mesh, n_microbatches: int = 1,
+                   axis: str = None):
+    """Run ``stage_fn(layers_local, h)`` as an N-stage pipeline.
+
+    params: pytree with a leading stacked-layer dim divisible by the number
+    of stages; x: (B, ...) with B divisible by n_microbatches.  Returns the
+    same value as folding all layers sequentially over x.
+    """
+    axis = axis or mesh.axis_names[0]
+    n_stages = mesh.shape[axis]
+    m = n_microbatches
+    b = x.shape[0]
+    assert b % m == 0, (b, m)
+    mb = b // m
+
+    def body(layers_local, x_all):
+        sid = lax.axis_index(axis)
+        xs = x_all.reshape(m, mb, *x_all.shape[1:])
+        buf = jnp.zeros_like(xs[0])
+        out = jnp.zeros_like(xs)
+
+        def step(t, carry):
+            buf, out = carry
+            feed = lax.dynamic_index_in_dim(xs, jnp.clip(t, 0, m - 1), 0,
+                                            keepdims=False)
+            inp = jnp.where(sid == 0, feed, buf)
+            y = stage_fn(layers_local, inp)
+            # hand off to the next stage; stage 0 keeps reading fresh input
+            nbuf = lax.ppermute(y, axis,
+                                [(i, i + 1) for i in range(n_stages - 1)])
+            idx = t - (n_stages - 1)
+            upd = lax.dynamic_update_index_in_dim(
+                out, y, jnp.clip(idx, 0, m - 1), 0)
+            take = (sid == n_stages - 1) & (idx >= 0)
+            out = jnp.where(take, upd, out)
+            return nbuf, out
+
+        _, out = lax.fori_loop(0, m + n_stages - 1, step, (buf, out))
+        # only the last stage holds real outputs; psum broadcasts them
+        out = lax.psum(jnp.where(sid == n_stages - 1, out, 0.0), axis)
+        return out.reshape(x_all.shape)
+
+    layer_specs = jax.tree_util.tree_map(lambda _: P(axis), params)
+    return shard_map(body, mesh=mesh, in_specs=(layer_specs, P()),
+                     out_specs=P())(params, x)

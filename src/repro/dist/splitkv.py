@@ -1,0 +1,117 @@
+"""Split-KV (flash-decode) attention under shard_map.
+
+The KV cache's sequence dimension is sharded over a mesh axis; each device
+writes the new token into its local shard (if it owns the slot), computes
+a *partial* softmax over its local keys, and the partials are merged with
+a pmax/psum log-sum-exp reduction — numerically identical to attention
+over the full cache.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.smap import shard_map
+
+
+def _write_local(cache, new, start, offset, l_local, scale_rank3=False):
+    """Write ``new`` (global position ``start``) into the local cache shard
+    covering [offset, offset + l_local)."""
+    pos = start - offset
+    idx = jnp.clip(pos, 0, l_local - 1)
+    zeros = (0, idx) + (0,) * (cache.ndim - 2)
+    updated = lax.dynamic_update_slice(cache, new.astype(cache.dtype), zeros)
+    in_range = (pos >= 0) & (pos < l_local)
+    return jnp.where(in_range, updated, cache)
+
+
+def splitkv_decode_attention(q, k_new, v_new, k_cache, v_cache, start, window,
+                             *, mesh, batch_axes: Tuple[str, ...],
+                             seq_axis: str,
+                             k_scale: Optional[jnp.ndarray] = None,
+                             v_scale: Optional[jnp.ndarray] = None,
+                             new_scales: Optional[Tuple] = None):
+    """One decode step against a sequence-sharded KV cache.
+
+    q: (B, 1, n_heads, d_head); k_new/v_new: (B, 1, n_kv, d_head) (already
+    quantized when scales are given); k_cache/v_cache: (B, max_seq, n_kv,
+    d_head) sharded over ``seq_axis`` on dim 1.  Returns (out (B, 1,
+    n_heads, d_head), updated caches) with caches sharded as they came in.
+    """
+    quant = k_scale is not None
+    B, _, n_heads, d_head = q.shape
+    n_kv = k_cache.shape[2]
+    group = n_heads // n_kv
+    n_seq = mesh.shape[seq_axis]
+    out_dtype = q.dtype
+
+    baxes = tuple(a for a in batch_axes if a in mesh.axis_names)
+    nb = 1
+    for a in baxes:
+        nb *= mesh.shape[a]
+    bspec = (baxes if len(baxes) > 1 else baxes[0]) \
+        if (nb > 1 and B % nb == 0) else None
+
+    cache_spec = P(bspec, seq_axis, None, None)
+    scale_spec = P(bspec, seq_axis, None)
+    new_spec = P(bspec, None, None, None)
+
+    def body(q, k_new, v_new, kc, vc, start, window, ks, vs, ks_new, vs_new):
+        l_local = kc.shape[1]
+        offset = lax.axis_index(seq_axis) * l_local
+        kc = _write_local(kc, k_new, start, offset, l_local)
+        vc = _write_local(vc, v_new, start, offset, l_local)
+        if quant:
+            ks = _write_local(ks, ks_new, start, offset, l_local)
+            vs = _write_local(vs, vs_new, start, offset, l_local)
+            k_all = kc.astype(jnp.float32) * ks[..., None]
+            v_all = vc.astype(jnp.float32) * vs[..., None]
+        else:
+            k_all = kc.astype(jnp.float32)
+            v_all = vc.astype(jnp.float32)
+
+        k_pos = offset + jnp.arange(l_local, dtype=jnp.int32)
+        valid = k_pos <= start
+        valid &= jnp.where(window > 0, k_pos > start - window, True)
+
+        qg = q.astype(jnp.float32).reshape(B, 1, n_kv, group, d_head)
+        # (B, n_kv, group, 1, l_local) partial scores
+        s = jnp.einsum("bsngh,bknh->bngsk", qg, k_all,
+                       preferred_element_type=jnp.float32)
+        s = s / jnp.sqrt(jnp.float32(d_head))
+        s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+        m_loc = jnp.max(s, axis=-1)
+        m = lax.pmax(m_loc, seq_axis)
+        p = jnp.exp(s - m[..., None])
+        p = jnp.where(valid[None, None, None, None, :], p, 0.0)
+        l_sum = lax.psum(jnp.sum(p, axis=-1), seq_axis)
+        o = jnp.einsum("bngsk,bknh->bsngh", p, v_all)
+        o = lax.psum(o, seq_axis)
+        o = o / jnp.maximum(l_sum, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return (o.reshape(B, 1, n_heads, d_head).astype(out_dtype),
+                kc, vc, ks, vs)
+
+    if quant:
+        ks_new, vs_new = new_scales
+    else:
+        # zero-size placeholders keep one body signature for both paths
+        z3 = jnp.zeros((B, 1, 0), jnp.float32)
+        k_scale = v_scale = jnp.zeros((B, k_cache.shape[1], 0), jnp.float32)
+        ks_new, vs_new = z3, z3
+
+    out, kc, vc, ks, vs = shard_map(
+        body, mesh=mesh,
+        in_specs=(new_spec, new_spec, new_spec, cache_spec, cache_spec,
+                  P(), P(), scale_spec, scale_spec,
+                  P(bspec, None, None), P(bspec, None, None)),
+        out_specs=(new_spec, cache_spec, cache_spec, scale_spec, scale_spec),
+    )(q, k_new, v_new, k_cache, v_cache, start, window,
+      k_scale, v_scale, ks_new, vs_new)
+
+    caches = (kc, vc, ks, vs) if quant else (kc, vc)
+    return out, caches

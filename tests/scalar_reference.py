@@ -1,0 +1,305 @@
+"""The seed's scalar (per-object, dict-loop) OMG orchestrator, kept
+verbatim as a behavioral reference: the vectorized FleetState engine must
+reproduce its timeline exactly on fleets where no pool overflow / cloud
+spill occurs (where the seed's known accounting bugs don't fire)."""
+
+from typing import Callable, Dict, List, Optional
+
+import dataclasses
+
+from repro.core.capacity import PoolState, RegionCapacity
+from repro.core.events import EventLoop
+from repro.core.omg import FailoverReport, Timeline
+from repro.core.service import ServiceSpec
+from repro.core.tiers import RTO_SECONDS, FailureClass
+from repro.core.traffic import FailoverModeDetector
+
+
+@dataclasses.dataclass
+class ScalarSEState:
+    spec: ServiceSpec
+    placement: str = "steady"       # steady | burst | cloud | down
+    replicas_live: int = 0
+    locked: bool = False
+    traffic_enabled: bool = True
+
+    @property
+    def cores_live(self) -> float:
+        return self.replicas_live * self.spec.cores_per_replica
+
+
+class ScalarOrchestrator:
+    """Seed implementation (reference for the equivalence test)."""
+
+    KILL_LATENCY_S = 5.0
+    BATCH_EVICT_S = 90.0
+    PREFETCH_S = 180.0
+    SPAWN_CORES_PER_HOST_S = 0.45
+    MBB_WAVE_S = 45.0
+    MBB_PARALLELISM = 2000
+    RL_RESTORE_WAVE_S = 120.0
+    CITY_WAVE_S = 30.0
+    TRAFFIC_MULTIPLIER = 2.0
+
+    def __init__(self, fleet: Dict[str, ServiceSpec], region: RegionCapacity,
+                 loop: Optional[EventLoop] = None, scale: float = 1.0):
+        self.fleet = fleet
+        self.region = region
+        self.loop = loop or EventLoop()
+        self.scale = scale
+        self.detector = FailoverModeDetector()
+        self.timeline = Timeline()
+        self.se: Dict[str, ScalarSEState] = {}
+        self._place_steady_state()
+        self.report: Optional[FailoverReport] = None
+        self._state = "steady"
+
+    def _place_steady_state(self):
+        for name, spec in self.fleet.items():
+            st = ScalarSEState(spec=spec, replicas_live=spec.replicas)
+            pool = (self.region.steady.overcommit
+                    if spec.failure_class.preemptible
+                    else self.region.steady.stateless)
+            ok = pool.alloc(st.cores_live)
+            if not ok:
+                self.region.steady.stateless.alloc(st.cores_live)
+                st.placement = "steady"
+            self.se[name] = st
+
+    def _by_class(self, fc: FailureClass) -> List[ScalarSEState]:
+        return [s for s in self.se.values() if s.spec.failure_class == fc]
+
+    def class_cores(self, fc: FailureClass,
+                    placement: Optional[str] = None) -> float:
+        return sum(s.cores_live for s in self._by_class(fc)
+                   if placement is None or s.placement == placement)
+
+    def class_envs(self, fc: FailureClass, placement: str) -> int:
+        return sum(1 for s in self._by_class(fc)
+                   if s.placement == placement and s.replicas_live > 0)
+
+    def _snap(self, **extra):
+        burst = (self.region.batch.burst.used
+                 if self.region.batch.burst else 0.0)
+        burst_cap = (self.region.batch.burst.capacity
+                     if self.region.batch.burst else 0.0)
+        self.timeline.snap(
+            self.loop.now,
+            steady_used=self.region.steady.stateless.used,
+            overcommit_used=self.region.steady.overcommit.used,
+            burst_capacity=burst_cap,
+            burst_used=burst,
+            cloud_used=self.region.cloud.provisioned,
+            rl_t_steady=(self.class_envs(FailureClass.RESTORE_LATER, "steady")
+                         + self.class_envs(FailureClass.TERMINATE, "steady")),
+            rl_bursted=self.class_envs(FailureClass.RESTORE_LATER, "burst")
+            + self.class_envs(FailureClass.RESTORE_LATER, "cloud"),
+            rl_not_bursted=sum(
+                1 for s in self._by_class(FailureClass.RESTORE_LATER)
+                if s.placement == "down"),
+            terminated=sum(1 for s in self._by_class(FailureClass.TERMINATE)
+                           if s.placement == "down"),
+            am_steady=self.class_envs(FailureClass.ACTIVE_MIGRATE, "steady"),
+            am_bursted=self.class_envs(FailureClass.ACTIVE_MIGRATE, "burst"),
+            utilization=self._utilization(),
+            **extra)
+
+    def _utilization(self) -> float:
+        mult = self.TRAFFIC_MULTIPLIER if self._state != "steady" else 1.0
+        busy = 0.0
+        for s in self.se.values():
+            if s.placement in ("steady",):
+                demand = 0.62 if not s.spec.failure_class.preemptible else 0.35
+                m = mult if s.spec.failure_class.survives_failover else 1.0
+                busy += s.cores_live * demand * m
+        return min(1.0, busy / max(1.0, self.region.steady.physical_cores))
+
+    def failover(self, tv_failover: float = 1.0) -> FailoverReport:
+        mode = self.detector.mode(tv_failover)
+        rep = FailoverReport(mode=mode, timeline=self.timeline)
+        self.report = rep
+        self._state = "failover"
+        self.loop.log(f"failover start, mode={mode}")
+        self._snap()
+        if mode == "non-peak":
+            self.loop.schedule(self.CITY_WAVE_S * 4, lambda: self._snap())
+            rep.always_on_ok = True
+            rep.rl_rto_met = True
+            self.loop.run()
+            return rep
+
+        t0 = self.loop.now
+        for s in self.se.values():
+            if s.spec.failure_class != FailureClass.ALWAYS_ON:
+                s.locked = True
+        self.loop.log("lockdown complete")
+
+        def evict_all():
+            n = 0
+            for s in self.se.values():
+                if s.spec.failure_class.preemptible and s.placement == "steady":
+                    freed = s.cores_live
+                    self.region.steady.overcommit.release(freed)
+                    s.placement = "down"
+                    s.replicas_live = 0
+                    s.traffic_enabled = False
+                    n += 1
+            self.loop.log(f"BBM evicted {n} preemptible SEs")
+            self._snap()
+        self.loop.schedule(self.KILL_LATENCY_S, evict_all, "bbm-evict")
+
+        burst_pool_holder: Dict[str, PoolState] = {}
+
+        def start_conversion():
+            pool = self.region.batch.convert()
+            pool_full = pool.capacity
+            burst_pool_holder["pool"] = pool
+            steps = 10
+            rate = self.SPAWN_CORES_PER_HOST_S * self.region.batch.n_hosts
+            ramp_total = pool_full / rate if pool_full > 0 else 0.0
+            self._online = 0.0
+
+            def make_tick(i):
+                def tick():
+                    frac = (i + 1) / steps
+                    self._online = pool_full * frac
+                    self._snap(burst_online=self._online)
+                    if i == steps - 1:
+                        rep.burst_full_at_s = self.loop.now - t0
+                        self.loop.log("burst capacity fully online")
+                        migrate_am()
+                        restore_rl()
+                return tick
+            for i in range(steps):
+                self.loop.schedule(ramp_total * (i + 1) / steps, make_tick(i))
+        self.loop.schedule(self.BATCH_EVICT_S + self.PREFETCH_S,
+                           start_conversion, "burst-conversion")
+
+        def migrate_am():
+            pool = burst_pool_holder["pool"]
+            ams = [s for s in self._by_class(FailureClass.ACTIVE_MIGRATE)
+                   if s.placement == "steady"]
+            waves = [ams[i:i + self.MBB_PARALLELISM]
+                     for i in range(0, len(ams), self.MBB_PARALLELISM)]
+
+            def run_wave(idx):
+                def w():
+                    for s in waves[idx]:
+                        if not pool.alloc(s.cores_live):
+                            rep.notes.append(
+                                f"burst full; {s.spec.name} stays in steady")
+                            continue
+                        self.region.steady.stateless.release(s.cores_live)
+                        s.placement = "burst"
+                    self._snap()
+                    if idx + 1 < len(waves):
+                        self.loop.schedule(self.MBB_WAVE_S, run_wave(idx + 1))
+                    else:
+                        rep.am_migrated_at_s = self.loop.now - t0
+                        self.loop.log("Active-Migrate migration complete")
+                        scale_always_on()
+                return w
+            if waves:
+                self.loop.schedule(self.MBB_WAVE_S, run_wave(0))
+            else:
+                rep.am_migrated_at_s = self.loop.now - t0
+                scale_always_on()
+
+        def scale_always_on():
+            need = self.class_cores(FailureClass.ALWAYS_ON) * \
+                (self.TRAFFIC_MULTIPLIER - 1.0)
+            got = self.region.steady.stateless.alloc(need)
+            if not got:
+                rep.always_on_ok = False
+                rep.notes.append(
+                    f"Always-On scale-up short by "
+                    f"{need - self.region.steady.stateless.free:.0f} cores")
+            else:
+                for s in self._by_class(FailureClass.ALWAYS_ON):
+                    s.replicas_live = int(
+                        s.replicas_live * self.TRAFFIC_MULTIPLIER)
+            self.loop.log("Always-On scaled for 2x traffic")
+            self._snap()
+
+        def restore_rl():
+            pool = burst_pool_holder["pool"]
+            rls = sorted((s for s in self._by_class(FailureClass.RESTORE_LATER)
+                          if s.placement == "down"),
+                         key=lambda s: s.spec.tier)
+
+            def restore_batch(idx):
+                def w():
+                    i = idx
+                    count = 0
+                    while i < len(rls) and count < self.MBB_PARALLELISM:
+                        s = rls[i]
+                        cores = s.spec.cores
+                        if pool.alloc(cores):
+                            s.placement = "burst"
+                        else:
+                            granted = self.region.cloud.provision(cores)
+                            if granted < cores:
+                                rep.notes.append(
+                                    f"cloud quota exhausted at {s.spec.name}")
+                                break
+                            s.placement = "cloud"
+                        s.replicas_live = s.spec.replicas
+                        s.traffic_enabled = True
+                        i += 1
+                        count += 1
+                    self._snap()
+                    if i < len(rls) and count > 0:
+                        self.loop.schedule(self.RL_RESTORE_WAVE_S,
+                                           restore_batch(i))
+                    else:
+                        rep.rl_restored_at_s = self.loop.now - t0
+                        rep.rl_rto_met = (rep.rl_restored_at_s <=
+                                          RTO_SECONDS[FailureClass.RESTORE_LATER])
+                        rep.cloud_cores_used = self.region.cloud.provisioned
+                        self.loop.log("Restore-Later restoration complete")
+                return w
+            self.loop.schedule(self.RL_RESTORE_WAVE_S, restore_batch(0))
+
+        self.loop.run()
+        self._snap()
+        return rep
+
+    def failback(self) -> None:
+        self._state = "failback"
+        self.loop.log("failback start")
+
+        def move_back():
+            for s in self.se.values():
+                if s.placement in ("burst", "cloud"):
+                    pool = (self.region.steady.overcommit
+                            if s.spec.failure_class.preemptible
+                            else self.region.steady.stateless)
+                    pool.alloc(s.spec.cores)
+                    s.placement = "steady"
+                    s.replicas_live = s.spec.replicas
+                if s.spec.failure_class == FailureClass.ALWAYS_ON:
+                    s.replicas_live = s.spec.replicas
+            self._snap()
+
+        def reenable_terminate():
+            for s in self._by_class(FailureClass.TERMINATE):
+                if s.placement == "down":
+                    s.placement = "steady"
+                    s.replicas_live = s.spec.replicas
+                    s.traffic_enabled = True
+                    self.region.steady.overcommit.alloc(s.cores_live)
+            self._snap()
+
+        def release_resources():
+            self.region.batch.release()
+            self.region.cloud.release_all()
+            for s in self.se.values():
+                s.locked = False
+            self._state = "steady"
+            self.loop.log("failback complete; locks released")
+            self._snap()
+
+        self.loop.schedule(self.CITY_WAVE_S * 4, move_back, "traffic-back")
+        self.loop.schedule(self.CITY_WAVE_S * 6, reenable_terminate)
+        self.loop.schedule(self.CITY_WAVE_S * 10, release_resources)
+        self.loop.run()
