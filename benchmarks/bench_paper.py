@@ -350,6 +350,61 @@ def bench_scenario_sweep() -> List[Row]:
     return [("scenario_sweep_vmap", us, derived)]
 
 
+def bench_graph_propagation() -> List[Row]:
+    """Graph engine acceptance: full-fleet multi-hop blackhole
+    certification at paper scale (~22k SEs, with relay chains) PLUS a
+    256-scenario vmapped blackhole ensemble in < 5 s on CPU; then the
+    greedy hardening planner runs the fleet to certified."""
+    from repro.core.fleet_state import synthesize_fleet_state
+    from repro.graph import (CallGraph, blackhole_ensemble, certify,
+                             plan_hardening)
+
+    fs = synthesize_fleet_state(scale=1.0, seed=SEED,
+                                unsafe_chain_fraction=0.05)
+    graph = CallGraph.from_fleet_state(fs)
+
+    def cert_plus_ensemble():
+        cert = certify(graph)
+        ens = blackhole_ensemble(graph, n_scenarios=256, seed=SEED)
+        return cert, ens
+
+    # first call in this process; earlier benches may already have
+    # compiled the (1, n) certify shape, so this is an upper bound on the
+    # warm path and a lower bound on a truly fresh-process cold start —
+    # the ensemble's (256, n) shape does compile here
+    us_cert, (cert, ens) = timed(cert_plus_ensemble, repeat=1)
+    us_warm, _ = timed(cert_plus_ensemble, repeat=3)
+    under_5s = us_cert / 1e6 < 5.0
+    us_plan, plan = timed(plan_hardening, graph, repeat=1)
+    record_extra("graph_propagation", {
+        "services": graph.n, "edges": graph.n_edges,
+        "unsafe_edges": graph.n_unsafe,
+        "broken_critical": cert.n_broken_critical,
+        "multi_hop_only": int(cert.multi_hop.sum()),
+        "propagation_rounds": cert.rounds,
+        "first_call_cert_plus_256_ensemble_s": us_cert / 1e6,
+        "warm_cert_plus_256_ensemble_s": us_warm / 1e6,
+        "under_5s": under_5s,
+        "ensemble_ok_fraction": float(ens["ok"].mean()),
+        "hardened_edges": plan.n_hardened,
+        "planner_rounds": plan.rounds,
+        "planner_certified": plan.certified,
+        "hardening_trajectory": plan.trajectory,
+    })
+    derived = (f"services={graph.n} edges={graph.n_edges} "
+               f"unsafe={graph.n_unsafe} broken_crit={cert.n_broken_critical} "
+               f"multi_hop={int(cert.multi_hop.sum())} "
+               f"rounds={cert.rounds} first_call_s={us_cert/1e6:.2f} "
+               f"under_5s={under_5s} (acceptance: cert + 256-ensemble < 5s)")
+    derived_plan = (f"hardened={plan.n_hardened} rounds={plan.rounds} "
+                    f"certified={plan.certified} "
+                    f"(paper: 4,000+ hardened before dropping the 2x buffer)")
+    return [("graph_certify_plus_ensemble", us_cert, derived),
+            ("graph_certify_plus_ensemble_warm", us_warm,
+             f"warm path, jit cached"),
+            ("graph_hardening_planner", us_plan, derived_plan)]
+
+
 ALL = [
     bench_table1_tiers,
     bench_table2_rpc_matrix,
@@ -367,4 +422,5 @@ ALL = [
     bench_canary_gate,
     bench_fleet_scale,
     bench_scenario_sweep,
+    bench_graph_propagation,
 ]

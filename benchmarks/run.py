@@ -3,8 +3,12 @@
 # SLA verdicts, ...) for the perf trajectory (BENCH_*.json).
 import argparse
 import json
+import os
 import sys
 import traceback
+
+# allow `python benchmarks/run.py` as well as `python -m benchmarks.run`
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:

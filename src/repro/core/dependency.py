@@ -145,8 +145,12 @@ def runtime_analysis(fleet: Dict[str, ServiceSpec],
     found = det.detect()
     truth = {(s.name, d) for s in fleet.values() for d in s.unsafe_deps()}
     tp = found & truth
+    # the detections ARE the graph: certification/planning downstream run
+    # on what this layer found, not on the planted ground truth
+    from repro.graph import CallGraph
     return {
         "found": found,
+        "graph": CallGraph.from_detections(fleet, found),
         "truth": truth,
         "cold_paths": cold,
         "true_positives": len(tp),

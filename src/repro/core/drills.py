@@ -4,13 +4,17 @@ failover certification.
 Dependency safety: graduated traffic blackholing (0% -> 100%) toward
 Restore-Later/Terminate services; a critical service is certified only if
 its error rate stays at baseline under complete dependency isolation.
-The error-rate model is vectorized over the whole fleet at once: a
-(steps x services) error matrix from per-caller unsafe-edge counts — one
-pass certifies every critical service simultaneously, which is what lets
-the drill run at paper scale (~22k services).
+Whether a service breaks under the blackhole comes from the graph
+engine's *multi-hop* fixed-point propagation (``repro.graph``): fail-close
+chains relay failure any number of hops up the call graph, so a critical
+service with no direct unsafe dependency still fails the drill if a
+critical callee of it breaks.  The graduated error-rate model is then
+vectorized over the whole fleet at once — one (steps x services) pass
+certifies every critical service simultaneously at paper scale.
 
 Failover certification: runs the end-to-end OMG workflow at peak and
-non-peak and checks every class SLA.
+non-peak and checks every class SLA; its availability verdict uses the
+same propagation engine.
 """
 
 from __future__ import annotations
@@ -56,18 +60,20 @@ def _error_rate_under_blackhole(spec: ServiceSpec,
     return min(1.0, err)
 
 
-def _blackhole_worst(unsafe_counts: np.ndarray, seed: int,
+def _blackhole_worst(breaks: np.ndarray, seed: int,
                      error_budget: float) -> np.ndarray:
     """Worst observed error rate per caller over the graduated blackhole
     steps, with production semantics: the drill aborts at the first step
-    whose error exceeds the budget."""
+    whose error exceeds the budget.  ``breaks`` is the per-caller break
+    indicator (>=1.0 where the multi-hop propagation says the service
+    breaks under a full blackhole, 0.0 where it degrades gracefully)."""
     rng = np.random.default_rng(seed)
     fracs = np.asarray(BLACKHOLE_STEPS)
-    n = len(unsafe_counts)
+    n = len(breaks)
     noise = np.clip(rng.normal(BASELINE_ERROR, 1e-4, (len(fracs), n)),
                     0.0, None)
     errs = np.minimum(1.0, noise + fracs[:, None] * 0.9
-                      * unsafe_counts[None, :])
+                      * breaks[None, :])
     exceeded = errs > error_budget
     aborted = exceeded.any(axis=0)
     first = np.argmax(exceeded, axis=0)
@@ -79,27 +85,21 @@ def dependency_safety_certification(fleet: Dict[str, ServiceSpec],
                                     error_budget: float = 0.002
                                     ) -> Dict[str, CertResult]:
     """Graduated blackholing for every critical service (one vectorized
-    pass over the whole fleet)."""
-    index = {n: i for i, n in enumerate(fleet)}
-    n = len(fleet)
-    preempt = np.fromiter(
-        (s.failure_class.preemptible for s in fleet.values()), bool, n)
-    unsafe_counts = np.zeros(n)
-    for i, s in enumerate(fleet.values()):
-        for d in s.deps:
-            j = index.get(d)
-            if j is not None and preempt[j] \
-                    and not s.fail_open.get(d, True):
-                unsafe_counts[i] += 1
-    worst = _blackhole_worst(unsafe_counts, seed, error_budget)
+    pass over the whole fleet, multi-hop via the graph engine)."""
+    from repro.graph import CallGraph, certify
+    graph = CallGraph.from_specs(fleet)
+    cert = certify(graph)            # dark = every preemptible service
+    worst = _blackhole_worst(cert.broken_critical.astype(float), seed,
+                             error_budget)
 
+    broken = {graph.names[i] for i in np.flatnonzero(cert.broken)}
     results: Dict[str, CertResult] = {}
     for i, (name, spec) in enumerate(fleet.items()):
         if not spec.failure_class.survives_failover:
             continue
-        failing = [d for d in spec.unsafe_deps()
-                   if fleet.get(d) is not None
-                   and fleet[d].failure_class.preemptible]
+        # the fail-close deps that actually carried the failure in
+        # (multi-hop: a broken *critical* callee counts too)
+        failing = [d for d in spec.unsafe_deps() if d in broken]
         results[name] = CertResult(service=name,
                                    certified=bool(worst[i] <= error_budget),
                                    failing_deps=failing,
@@ -110,15 +110,19 @@ def dependency_safety_certification(fleet: Dict[str, ServiceSpec],
 def certify_fleet_state(fs: FleetState, seed: int = 0,
                         error_budget: float = 0.002) -> Dict[str, object]:
     """Array-native blackhole certification over a ``FleetState`` (requires
-    edge arrays).  Returns summary counts + the flagged-caller mask."""
+    edge arrays): multi-hop propagation decides who breaks, the graduated
+    error model decides who gets flagged.  Returns summary counts + the
+    flagged-caller mask."""
+    from repro.graph import CallGraph, certify
     assert fs.edges is not None, "FleetState synthesized without edges"
-    e = fs.edges
-    unsafe_edge = (~e.fail_open) & (fs.fclass[e.dst] >= RL)
-    unsafe_counts = np.bincount(e.src[unsafe_edge],
-                                minlength=fs.n).astype(float)
-    worst = _blackhole_worst(unsafe_counts, seed, error_budget)
+    graph = CallGraph.from_fleet_state(fs)
+    cert = certify(graph)
+    worst = _blackhole_worst(cert.broken_critical.astype(float), seed,
+                             error_budget)
     crit = fs.survives
     flagged = crit & (worst > error_budget)
+    e = fs.edges
+    unsafe_edge = (~e.fail_open) & (fs.fclass[e.dst] >= RL)
     return {
         "n_critical": int(np.count_nonzero(crit)),
         "n_certified": int(np.count_nonzero(crit & ~flagged)),
@@ -126,6 +130,10 @@ def certify_fleet_state(fs: FleetState, seed: int = 0,
         "flagged_mask": flagged,
         "unsafe_edges": int(np.count_nonzero(
             unsafe_edge & fs.survives[e.src])),
+        # multi-hop extras: criticals broken only through relay chains,
+        # and how many propagation rounds the fixed point took
+        "n_multi_hop": int(np.count_nonzero(cert.multi_hop)),
+        "propagation_rounds": cert.rounds,
     }
 
 
@@ -173,14 +181,11 @@ def failover_certification(fleet: Dict[str, ServiceSpec],
         "restore_later": rep.rl_rto_met,
         "burst_under_20min": (rep.burst_full_at_s or 1e18) <= 20 * 60,
     }
-    # availability: critical services must not depend fail-close on anything
-    # that was preempted
-    unsafe_hit = [
-        (s.name, d) for s in fleet.values()
-        if s.failure_class.survives_failover
-        for d in s.unsafe_deps()
-        if fleet.get(d) is not None and fleet[d].failure_class.preemptible]
-    availability_ok = not unsafe_hit and rep.always_on_ok
+    # availability: no critical service may break — multi-hop — when the
+    # preempted (blackholed) services go dark
+    from repro.graph import CallGraph, certify
+    dep_cert = certify(CallGraph.from_specs(fleet))
+    availability_ok = dep_cert.ok and rep.always_on_ok
     orch.failback()
     return FailoverCertification(
         peak_report=rep, classes_ok=classes_ok,

@@ -13,7 +13,8 @@ from typing import Callable, List, Optional, Tuple
 
 class EventLoop:
     def __init__(self):
-        self._q: List[Tuple[float, int, Callable]] = []
+        # (fire_time, seq, fn, label)
+        self._q: List[Tuple[float, int, Callable, str]] = []
         self._seq = itertools.count()
         self.now: float = 0.0
         self._trace: List[Tuple[float, str]] = []
@@ -29,7 +30,8 @@ class EventLoop:
     def trace(self):
         return list(self._trace)
 
-    def run(self, until: Optional[float] = None, max_events: int = 10_000_000):
+    def run(self, until: Optional[float] = None,
+            max_events: int = 10_000_000) -> int:
         n = 0
         while self._q and n < max_events:
             t, _, fn, label = heapq.heappop(self._q)

@@ -45,6 +45,9 @@ class EdgeArrays:
     src: np.ndarray            # caller row index, int32
     dst: np.ndarray            # callee row index, int32
     fail_open: np.ndarray      # bool — False = fail-close (UNSAFE)
+    # per-edge RPC volume (Table 2 cell volume split across the cell's
+    # edges) — the graph engine uses it to rank hardening candidates
+    weight: Optional[np.ndarray] = None   # float32
 
     @property
     def n(self) -> int:
@@ -161,9 +164,28 @@ def edges_from_specs(fleet: Dict[str, "object"],
             src.append(i)
             dst.append(j)
             fo.append(bool(s.fail_open.get(d, True)))
-    return EdgeArrays(src=np.asarray(src, np.int32),
-                      dst=np.asarray(dst, np.int32),
-                      fail_open=np.asarray(fo, bool))
+    src_a = np.asarray(src, np.int32)
+    dst_a = np.asarray(dst, np.int32)
+    tier = np.fromiter((int(s.tier) for s in fleet.values()), np.int8,
+                       len(fleet))
+    return EdgeArrays(src=src_a, dst=dst_a,
+                      fail_open=np.asarray(fo, bool),
+                      weight=_edge_weights(tier, src_a, dst_a))
+
+
+def _edge_weights(tier: np.ndarray, src: np.ndarray,
+                  dst: np.ndarray) -> np.ndarray:
+    """Per-edge RPC volume: the Table 2 cell volume split evenly across the
+    edges in that (caller_tier, callee_tier) cell — the same rule
+    ``dependency.generate_traces`` uses to weight its sampled traffic."""
+    from repro.core.service import _TABLE2
+    n_tiers = len(_T)
+    vol = np.asarray([[_TABLE2[t][c] for c in range(n_tiers)] for t in _T],
+                     np.float64)
+    cell = tier[src].astype(np.int64) * n_tiers + tier[dst]
+    counts = np.bincount(cell, minlength=n_tiers * n_tiers)
+    return (vol.ravel()[cell]
+            / np.maximum(counts[cell], 1)).astype(np.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -178,10 +200,20 @@ def synthesize_fleet_state(scale: float = 1.0, seed: int = 0,
                            unsafe_fraction: float = 0.08,
                            mean_deps: float = 6.0,
                            demand_fraction: float = 0.25,
-                           with_edges: bool = True) -> FleetState:
+                           with_edges: bool = True,
+                           unsafe_chain_fraction: float = 0.0) -> FleetState:
     """Array-native analogue of ``service.synthesize_fleet``: same tier
     structure (Tables 1-3), same footprint distribution, no per-service
-    Python objects.  ~22k services synthesize in well under a second."""
+    Python objects.  ~22k services synthesize in well under a second.
+
+    unsafe_chain_fraction plants fail-close edges between *critical*
+    services (caller and callee both survive failover).  These edges break
+    nothing on their own — critical services never go dark — but they relay
+    breakage: a critical caller whose critical callee breaks through an
+    unsafe preemptible dependency breaks too.  They are the transitive
+    failure chains the graph engine's multi-hop propagation exists to find
+    (default 0.0 keeps the one-hop fleet shape the seed tests pin down).
+    """
     from repro.core.service import _TABLE2   # single source for Table 2
     rng = np.random.default_rng(seed)
 
@@ -248,6 +280,14 @@ def synthesize_fleet_state(scale: float = 1.0, seed: int = 0,
         src, dst, callee_tier = src[keep], dst[keep], callee_tier[keep]
         # fail-close only on tier-inverted (critical -> preemptible) edges
         inverted = (fclass[src] <= AM) & (fclass[dst] >= RL)
-        fail_open = ~(inverted & (rng.random(len(src)) < unsafe_fraction))
-        fs.edges = EdgeArrays(src=src, dst=dst, fail_open=fail_open)
+        fail_close = inverted & (rng.random(len(src)) < unsafe_fraction)
+        if unsafe_chain_fraction > 0.0:
+            # relay edges: fail-close between critical services (multi-hop
+            # chains).  Drawn AFTER the inverted-edge draw so that
+            # unsafe_chain_fraction=0.0 is bit-identical to the seed stream.
+            chain = (fclass[src] <= AM) & (fclass[dst] <= AM)
+            fail_close |= chain & (rng.random(len(src))
+                                   < unsafe_chain_fraction)
+        fs.edges = EdgeArrays(src=src, dst=dst, fail_open=~fail_close,
+                              weight=_edge_weights(tier_arr, src, dst))
     return fs

@@ -155,20 +155,27 @@ def _scenario_outcome(consts: Dict[str, jnp.ndarray], p: Dict[str, jnp.ndarray])
     util_ok = util_peak <= _QOS_EVICT
 
     # availability estimate: AO shortfall bites immediately; unrestored RL
-    # degrades the fraction of critical flows that (safely) depend on it
+    # degrades the fraction of critical flows that (safely) depend on it;
+    # every critical service the dependency-graph propagation says *breaks*
+    # under this scenario's blackhole is hard-down for the failover window
     crit = jnp.maximum(ao + am, 1.0)
     rl_exposure = 0.1 * rl_down / jnp.maximum(rl, 1.0)
     window_frac = jnp.minimum(1.0, rl_done_s / _RL_RTO_S)
+    dep_broken = p["dep_broken_frac"]
+    dep_ok = dep_broken <= 0.0
     availability = (_BASE_AVAILABILITY
                     - 0.5 * ao_short / crit
                     - rl_exposure * window_frac
+                    - 0.5 * dep_broken
                     - jnp.where(util_ok, 0.0, 1e-4))
     availability = jnp.clip(availability, 0.0, 1.0)
 
-    sla_ok = (ao_ok & rl_ok & preempt_fit
+    sla_ok = (ao_ok & rl_ok & preempt_fit & dep_ok
               & (am_done_s <= 30.0 * 60.0)
               & (burst_full_s <= 20.0 * 60.0) & util_ok)
     return {
+        "dep_broken_frac": dep_broken,
+        "dep_ok": dep_ok,
         "burst_full_s": burst_full_s,
         "am_done_s": am_done_s,
         "rl_done_s": rl_done_s,
@@ -190,10 +197,17 @@ _sweep_jit = jax.jit(jax.vmap(_scenario_outcome, in_axes=(None, 0)))
 
 
 def sweep_scenarios(agg: FleetAggregates,
-                    grid: Optional[Dict[str, np.ndarray]] = None
+                    grid: Optional[Dict[str, np.ndarray]] = None,
+                    dep_broken_frac: Optional[np.ndarray] = None
                     ) -> Dict[str, np.ndarray]:
-    """Evaluate the failover model over every scenario in one vmap."""
+    """Evaluate the failover model over every scenario in one vmap.
+
+    dep_broken_frac: optional per-scenario fraction of critical services
+    the dependency-graph blackhole propagation says break (see
+    ``sweep_with_dependency_ensemble``); defaults to 0 everywhere (a fully
+    hardened fleet)."""
     grid = grid if grid is not None else scenario_grid()
+    n = len(next(iter(grid.values())))
     consts = {"ao": jnp.asarray(agg.ao_cores, jnp.float32),
               "am": jnp.asarray(agg.am_cores, jnp.float32),
               "rl": jnp.asarray(agg.rl_cores, jnp.float32),
@@ -201,16 +215,44 @@ def sweep_scenarios(agg: FleetAggregates,
               "am_envs": jnp.asarray(agg.am_envs, jnp.float32),
               "rl_envs": jnp.asarray(agg.rl_envs, jnp.float32)}
     params = {k: jnp.asarray(v, jnp.float32) for k, v in grid.items()}
+    if dep_broken_frac is None:
+        dep_broken_frac = np.zeros(n)
+    params["dep_broken_frac"] = jnp.asarray(dep_broken_frac, jnp.float32)
     out = _sweep_jit(consts, params)
     result = {k: np.asarray(v) for k, v in out.items()}
     result.update({k: np.asarray(v) for k, v in grid.items()})
     return result
 
 
+def sweep_with_dependency_ensemble(fs: FleetState,
+                                   grid: Optional[Dict[str, np.ndarray]]
+                                   = None,
+                                   seed: int = 0) -> Dict[str, np.ndarray]:
+    """Scenario sweep with the dependency layer closed in: each scenario's
+    ``evict_fraction`` sets its blackhole intensity — that fraction of
+    preemptible services goes dark, with the uniform draws shared across
+    scenarios, so equal fractions share one dark set and differing
+    fractions give *nested* sets (vary the grid's ``evict_fraction`` axis
+    for ensemble diversity).  One batched multi-hop propagation certifies
+    the whole ensemble and the per-scenario broken-critical fractions feed
+    the availability estimate/SLA verdicts."""
+    from repro.graph import CallGraph, blackhole_ensemble
+    grid = grid if grid is not None else scenario_grid()
+    graph = CallGraph.from_fleet_state(fs)
+    ens = blackhole_ensemble(graph, seed=seed,
+                             fractions=np.asarray(grid["evict_fraction"]))
+    agg = FleetAggregates.from_fleet_state(fs)
+    result = sweep_scenarios(agg, grid,
+                             dep_broken_frac=ens["broken_critical_frac"])
+    result["dep_n_broken_critical"] = np.asarray(ens["n_broken_critical"])
+    result["dep_n_dark"] = np.asarray(ens["n_dark"])
+    return result
+
+
 def summarize_sweep(result: Dict[str, np.ndarray]) -> Dict[str, object]:
     n = len(result["sla_ok"])
     ok = int(result["sla_ok"].sum())
-    return {
+    out = {
         "n_scenarios": n,
         "n_sla_ok": ok,
         "sla_ok_fraction": ok / max(1, n),
@@ -219,6 +261,11 @@ def summarize_sweep(result: Dict[str, np.ndarray]) -> Dict[str, object]:
         "worst_rl_done_min": float(result["rl_done_s"].max() / 60.0),
         "worst_util_peak": float(result["util_peak"].max()),
     }
+    if "dep_ok" in result:
+        out["n_dep_ok"] = int(result["dep_ok"].sum())
+        out["worst_dep_broken_frac"] = float(
+            result["dep_broken_frac"].max())
+    return out
 
 
 def scenario_records(result: Dict[str, np.ndarray]) -> list:

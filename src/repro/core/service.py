@@ -60,7 +60,8 @@ def synthesize_fleet(scale: float = 0.02, seed: int = 0,
                      unsafe_fraction: float = 0.08,
                      mean_deps: float = 6.0,
                      demand_fraction: float = 0.25,
-                     as_arrays: bool = False):
+                     as_arrays: bool = False,
+                     unsafe_chain_fraction: float = 0.0):
     """Builds a fleet whose tier structure matches Tables 1-3.
 
     scale: fraction of the paper's service counts (0.02 -> ~440 services).
@@ -73,12 +74,17 @@ def synthesize_fleet(scale: float = 0.02, seed: int = 0,
     of ServiceSpecs — the fast path that makes scale=1.0 (~22k services)
     synthesize in a fraction of a second (array-native RNG; same tier
     structure, different draw order than the object path).
+    unsafe_chain_fraction: fraction of critical->critical edges that are
+    fail-close *relay* edges — harmless alone, but they carry breakage
+    multiple hops up the call graph (see ``repro.graph``); 0.0 keeps the
+    seed's one-hop fleet shape and RNG stream.
     """
     if as_arrays:
         from repro.core.fleet_state import synthesize_fleet_state
         return synthesize_fleet_state(
             scale=scale, seed=seed, unsafe_fraction=unsafe_fraction,
-            mean_deps=mean_deps, demand_fraction=demand_fraction)
+            mean_deps=mean_deps, demand_fraction=demand_fraction,
+            unsafe_chain_fraction=unsafe_chain_fraction)
     rng = random.Random(seed)
     fleet: Dict[str, ServiceSpec] = {}
     by_tier: Dict[Tier, List[str]] = {t: [] for t in _T}
@@ -123,7 +129,15 @@ def synthesize_fleet(scale: float = 0.02, seed: int = 0,
             # tier-inverted edges (critical -> preemptible) may be fail-close
             inverted = (spec.failure_class.survives_failover and
                         fleet[callee].failure_class.preemptible)
+            # critical -> critical relay edges (multi-hop chains); the
+            # nested guard keeps the RNG stream untouched when the chain
+            # fraction is 0.0 (seed-pinned fleets stay identical)
+            chain = (unsafe_chain_fraction > 0.0 and not inverted
+                     and spec.failure_class.survives_failover
+                     and fleet[callee].failure_class.survives_failover)
             if inverted and rng.random() < unsafe_fraction:
+                spec.fail_open[callee] = False
+            elif chain and rng.random() < unsafe_chain_fraction:
                 spec.fail_open[callee] = False
             else:
                 spec.fail_open[callee] = True

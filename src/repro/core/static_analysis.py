@@ -132,8 +132,10 @@ def static_analysis(fleet: Dict[str, ServiceSpec], seed: int = 0
     found = StaticFailCloseAnalyzer().analyze_fleet(irs)
     truth = {(s.name, d) for s in fleet.values() for d in s.unsafe_deps()}
     tp = found & truth
+    from repro.graph import CallGraph
     return {
         "found": found,
+        "graph": CallGraph.from_detections(fleet, found),
         "truth": truth,
         "true_positives": len(tp),
         "false_positives": len(found - truth),

@@ -1,0 +1,21 @@
+"""Array-native dependency-graph engine (paper §5-6).
+
+CSR call graph + JAX fixed-point failure propagation + vmapped blackhole
+ensembles + the greedy hardening planner and regression gate.  How
+certification flows: detect (runtime/static layers) -> build graph ->
+propagate (multi-hop blackhole) -> gate (plan hardening, block
+regressions).
+"""
+
+from repro.graph.callgraph import CallGraph
+from repro.graph.planner import (GateResult, HardeningPlan, plan_hardening,
+                                 regression_gate)
+from repro.graph.propagation import (Certification, blackhole_ensemble,
+                                     blast_radius, certify, propagate,
+                                     propagate_many)
+
+__all__ = [
+    "CallGraph", "Certification", "GateResult", "HardeningPlan",
+    "blackhole_ensemble", "blast_radius", "certify", "plan_hardening",
+    "propagate", "propagate_many", "regression_gate",
+]

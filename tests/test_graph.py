@@ -1,0 +1,256 @@
+"""Dependency-graph engine: scalar-BFS equivalence (exact), blast radius,
+blackhole ensembles, the hardening planner, the regression gate, and the
+drills/scenarios integration."""
+
+import numpy as np
+import pytest
+
+from repro.core.drills import certify_fleet_state
+from repro.core.fleet_state import synthesize_fleet_state
+from repro.core.scenarios import (scenario_grid, summarize_sweep,
+                                  sweep_with_dependency_ensemble)
+from repro.core.service import synthesize_fleet, unsafe_edges
+from repro.graph import (CallGraph, blackhole_ensemble, blast_radius,
+                         certify, plan_hardening, propagate, propagate_many,
+                         regression_gate)
+from repro.graph.callgraph import _build_csr
+
+
+# ---------------------------------------------------------------------------
+# scalar reference: worklist BFS over reversed fail-close edges
+# ---------------------------------------------------------------------------
+
+
+def bfs_propagate(n, edges, dark):
+    """Reference fixed point: edges = [(caller, callee, fail_open)], dark =
+    iterable of dark nodes.  Failure flows callee -> caller along
+    fail-close edges only."""
+    callers_of = {}                      # callee -> [callers via fail-close]
+    for u, v, fo in edges:
+        if not fo:
+            callers_of.setdefault(v, []).append(u)
+    broken = set(dark)
+    frontier = list(broken)
+    while frontier:
+        v = frontier.pop()
+        for u in callers_of.get(v, ()):
+            if u not in broken:
+                broken.add(u)
+                frontier.append(u)
+    return broken
+
+
+def random_graph(rng, n=None, p_edge=0.15, p_close=0.5):
+    """Random digraph with cycles, self-loop-free, mixed fail-open/close
+    boundaries, random critical/preemptible masks."""
+    n = n if n is not None else rng.integers(4, 60)
+    m = rng.random((n, n)) < p_edge
+    np.fill_diagonal(m, False)
+    src, dst = np.nonzero(m)
+    fail_open = rng.random(len(src)) >= p_close
+    critical = rng.random(n) < 0.4
+    preemptible = ~critical & (rng.random(n) < 0.7)
+    g = _build_csr(n, src.astype(np.int32), dst.astype(np.int32),
+                   fail_open, np.ones(len(src), np.float32),
+                   critical, preemptible, [f"svc-{i}" for i in range(n)])
+    edges = list(zip(src.tolist(), dst.tolist(), fail_open.tolist()))
+    return g, edges
+
+
+def test_kernel_matches_bfs_randomized():
+    """Property-style: random graphs (cycles included) x random preemption
+    sets — the CSR fixed-point kernel must match the BFS reference
+    EXACTLY, node for node."""
+    for seed in range(20):
+        rng = np.random.default_rng(seed)
+        g, edges = random_graph(rng)
+        for _ in range(4):
+            dark = rng.random(g.n) < rng.uniform(0.0, 0.6)
+            want = bfs_propagate(g.n, edges, np.flatnonzero(dark))
+            got = propagate(g, dark)
+            assert set(np.flatnonzero(got)) == want, (seed, dark)
+
+
+def test_kernel_matches_bfs_batched():
+    rng = np.random.default_rng(42)
+    g, edges = random_graph(rng, n=40)
+    dark = rng.random((16, g.n)) < 0.3
+    broken, rounds = propagate_many(g, dark)
+    assert rounds >= 1
+    for s in range(16):
+        want = bfs_propagate(g.n, edges, np.flatnonzero(dark[s]))
+        assert set(np.flatnonzero(broken[s])) == want, s
+
+
+def test_cycle_and_fail_open_boundary():
+    # a -> b -> c -> a all fail-close (a cycle), c -> d fail-CLOSE,
+    # b -> e fail-OPEN; darkening d must break the whole cycle but spare e's
+    # side of the boundary
+    names = list("abcde")
+    src = np.array([0, 1, 2, 2, 1], np.int32)
+    dst = np.array([1, 2, 0, 3, 4], np.int32)
+    fo = np.array([False, False, False, False, True])
+    g = _build_csr(5, src, dst, fo, np.ones(5, np.float32),
+                   np.array([True, True, True, False, False]),
+                   np.array([False, False, False, True, True]), names)
+    broken = propagate(g, np.array([False, False, False, True, False]))
+    assert broken.tolist() == [True, True, True, True, False]
+    # darkening e (fail-open caller side) breaks nothing else
+    broken2 = propagate(g, np.array([False, False, False, False, True]))
+    assert broken2.tolist() == [False, False, False, False, True]
+
+
+def test_fleet_certification_matches_bfs():
+    """The real synthesized fleet (with relay chains): multi-hop certify
+    equals the BFS reference on the full preemption blackhole."""
+    fs = synthesize_fleet_state(scale=0.05, seed=11,
+                                unsafe_chain_fraction=0.06)
+    g = CallGraph.from_fleet_state(fs)
+    edges = list(zip(g.src.tolist(), g.dst.tolist(),
+                     g.fail_open.tolist()))
+    want = bfs_propagate(g.n, edges, np.flatnonzero(g.preemptible))
+    cert = certify(g)
+    assert set(np.flatnonzero(cert.broken)) == want
+    assert cert.n_broken_critical > 0
+    # chains present: some criticals broke with no direct unsafe cause
+    assert cert.multi_hop.sum() > 0
+
+
+def test_blast_radius_matches_bfs():
+    for seed in (1, 5, 9):
+        rng = np.random.default_rng(seed)
+        g, edges = random_graph(rng, n=35)
+        sources = np.arange(g.n)
+        radius = blast_radius(g, sources=sources)
+        for j in sources:
+            want = bfs_propagate(g.n, edges, [j])
+            assert radius[j] == sum(g.critical[u] for u in want), (seed, j)
+
+
+def test_blackhole_ensemble_nested_monotone():
+    """Shared uniform draws + sorted fractions -> nested dark sets -> the
+    broken counts must be monotone in the blackhole fraction."""
+    fs = synthesize_fleet_state(scale=0.05, seed=3,
+                                unsafe_chain_fraction=0.05)
+    g = CallGraph.from_fleet_state(fs)
+    fr = np.linspace(0.0, 1.0, 64)
+    ens = blackhole_ensemble(g, seed=0, fractions=fr)
+    assert (np.diff(ens["n_dark"]) >= 0).all()
+    assert (np.diff(ens["n_broken_critical"]) >= 0).all()
+    assert ens["n_broken_critical"][0] == 0        # empty blackhole
+    assert not ens["ok"][-1]                       # full blackhole breaks
+    assert len(ens["ok"]) == 64
+
+
+def test_planner_hardens_until_certified():
+    fs = synthesize_fleet_state(scale=0.05, seed=7,
+                                unsafe_chain_fraction=0.06)
+    g = CallGraph.from_fleet_state(fs)
+    assert not certify(g).ok
+    plan = plan_hardening(g, batch=16)
+    assert plan.certified
+    assert certify(plan.graph).ok
+    assert 0 < plan.n_hardened <= g.n_unsafe
+    # trajectory: broken criticals decrease monotonically to zero
+    broken = [t["n_broken_critical"] for t in plan.trajectory]
+    assert broken[-1] == 0
+    assert all(b1 >= b2 for b1, b2 in zip(broken, broken[1:]))
+    # relay chains mean certification needs fewer conversions than there
+    # are unsafe edges (chains die once their entry edges are hardened)
+    assert plan.n_hardened < g.n_unsafe
+
+
+def test_regression_gate_flags_planted_edge():
+    fs = synthesize_fleet_state(scale=0.05, seed=7,
+                                unsafe_chain_fraction=0.06)
+    hardened = plan_hardening(CallGraph.from_fleet_state(fs)).graph
+    # hardened fleet passes its own gate
+    assert regression_gate(hardened, hardened).ok
+    # plant a new unsafe edge critical -> preemptible: flagged
+    crit = int(np.flatnonzero(hardened.critical)[0])
+    pre = int(np.flatnonzero(hardened.preemptible)[0])
+    bad = hardened.with_edge(hardened.names[crit], hardened.names[pre],
+                             fail_open=False)
+    gate = regression_gate(hardened, bad)
+    assert not gate.ok
+    assert (hardened.names[crit], hardened.names[pre]) in [
+        (c, d) for c, d, _ in gate.violations]
+    # a new unsafe edge between preemptible services with no critical
+    # fail-close callers reaches nothing critical: gate passes
+    pre2 = int(np.flatnonzero(hardened.preemptible)[1])
+    benign = hardened.with_edge(hardened.names[pre],
+                                hardened.names[pre2], fail_open=False)
+    gate2 = regression_gate(hardened, benign)
+    assert gate2.ok and gate2.new_unsafe_edges
+
+
+def test_detections_build_equivalent_graph():
+    """Static analysis has perfect recall/precision on the synthesized IR,
+    so the graph built from its detections certifies identically to the
+    ground-truth graph."""
+    from repro.core.static_analysis import static_analysis
+    fleet = synthesize_fleet(scale=0.05, seed=3)
+    sa = static_analysis(fleet, seed=2)
+    g_det, g_truth = sa["graph"], CallGraph.from_specs(fleet)
+    assert g_det.unsafe_edge_keys() == g_truth.unsafe_edge_keys()
+    assert (certify(g_det).broken == certify(g_truth).broken).all()
+
+
+def test_drills_flag_multi_hop_chain():
+    """A critical service with NO direct unsafe dependency but a fail-close
+    edge onto a broken critical callee must be flagged by the drill — the
+    case the one-hop error model could not see."""
+    fs = synthesize_fleet_state(scale=0.05, seed=11,
+                                unsafe_chain_fraction=0.06)
+    cert = certify_fleet_state(fs, seed=0)
+    assert cert["n_multi_hop"] > 0
+    assert cert["propagation_rounds"] >= 2
+    g = CallGraph.from_fleet_state(fs)
+    relay_only = certify(g).multi_hop
+    assert (cert["flagged_mask"] & relay_only).sum() == relay_only.sum()
+    # hardening everything un-flags everyone
+    fs.edges.fail_open[:] = True
+    cert2 = certify_fleet_state(fs, seed=0)
+    assert cert2["n_flagged"] == 0 and cert2["n_multi_hop"] == 0
+
+
+def test_scenario_sweep_with_dependency_ensemble():
+    fs = synthesize_fleet_state(scale=0.05, seed=7,
+                                unsafe_chain_fraction=0.05)
+    fs.apply_ufa_target_classes()
+    grid = scenario_grid(evict_fraction=(1.0, 0.75, 0.5, 0.25))
+    res = sweep_with_dependency_ensemble(fs, grid, seed=0)
+    n = len(grid["evict_fraction"])
+    assert len(res["dep_ok"]) == n
+    # un-hardened fleet: full-eviction scenarios must fail the dep check
+    full = res["evict_fraction"] == 1.0
+    assert not res["dep_ok"][full].any()
+    assert not res["sla_ok"][full].any()
+    summary = summarize_sweep(res)
+    assert summary["n_dep_ok"] < n
+    assert summary["worst_dep_broken_frac"] > 0
+    # hardened fleet: dep check passes everywhere and availability is
+    # pointwise >= the un-hardened sweep's
+    fs.edges.fail_open[:] = True
+    res2 = sweep_with_dependency_ensemble(fs, grid, seed=0)
+    assert res2["dep_ok"].all()
+    assert (res2["availability"] >= res["availability"] - 1e-9).all()
+
+
+def test_unsafe_edges_object_path_with_chains():
+    """Object-path synthesis with relay chains: every unsafe edge is
+    either tier-inverted (critical -> preemptible) or a critical ->
+    critical relay, and relays actually occur."""
+    with_chains = synthesize_fleet(scale=0.05, seed=3,
+                                   unsafe_chain_fraction=0.3)
+    relays = 0
+    for c, d in unsafe_edges(with_chains):
+        assert with_chains[c].failure_class.survives_failover
+        if with_chains[d].failure_class.survives_failover:
+            relays += 1
+        else:
+            assert with_chains[d].failure_class.preemptible
+    assert relays > 0
+    # and relays feed multi-hop breakage the drill can see
+    g = CallGraph.from_specs(with_chains)
+    assert certify(g).multi_hop.sum() > 0
