@@ -1,0 +1,108 @@
+"""Benchmark-regression guard: compare a fresh ``run.py --quick --json``
+run against the committed baseline ``BENCH_*.json`` and fail on a >Nx
+slowdown of any shared row.
+
+The baseline is auto-picked as the highest-numbered ``BENCH_<n>.json`` in
+the repo root that is not the fresh file itself — in CI the fresh run
+overwrites the committed ``BENCH_<latest>.json`` in the workspace, so the
+guard naturally compares against the previous PR's committed snapshot.
+
+Rows are matched by name.  Sub-``--min-us`` fresh rows are ignored (they
+are dispatch-overhead noise, not regressions), as are rows that exist on
+only one side (new/retired benchmarks).  A fresh row that *errored*
+(``us_per_call`` null) always fails.
+
+Caveat: the committed baseline was produced on the author's machine, so
+the ratio folds in machine-speed differences, not just code changes — the
+2x default factor leaves headroom for a CI runner of roughly comparable
+per-core speed, and ``--factor`` is the knob if a runner class proves
+systematically slower.  A same-runner baseline (cached artifact from the
+previous main build) would be tighter; the committed file keeps the guard
+dependency-free and the trajectory reviewable in-repo.
+
+  python benchmarks/check_regression.py BENCH_3.json
+  python benchmarks/check_regression.py fresh.json --baseline BENCH_2.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+
+def pick_baseline(root: Path, fresh: Path) -> Path:
+    cands = []
+    for p in root.glob("BENCH_*.json"):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", p.name)
+        if m and p.resolve() != fresh.resolve():
+            cands.append((int(m.group(1)), p))
+    if not cands:
+        raise SystemExit(f"no baseline BENCH_<n>.json found in {root}")
+    return max(cands)[1]
+
+
+def load_rows(path: Path):
+    payload = json.loads(path.read_text())
+    return {r["name"]: r["us_per_call"] for r in payload.get("rows", [])}, \
+        payload.get("failures", 0)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", type=Path,
+                    help="fresh run.py --quick --json output")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="baseline JSON (default: highest committed "
+                         "BENCH_<n>.json that isn't the fresh file)")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="fail on fresh > factor * baseline (default 2x)")
+    ap.add_argument("--min-us", type=float, default=5_000.0,
+                    help="ignore fresh rows faster than this (noise floor)")
+    args = ap.parse_args()
+
+    baseline = args.baseline or pick_baseline(args.fresh.resolve().parent,
+                                              args.fresh)
+    fresh_rows, fresh_failures = load_rows(args.fresh)
+    base_rows, _ = load_rows(baseline)
+    print(f"regression guard: {args.fresh} vs baseline {baseline} "
+          f"(factor {args.factor}x, noise floor {args.min_us:.0f}us)")
+
+    violations = []
+    errors = [n for n, us in fresh_rows.items() if us is None]
+    for name, us in sorted(fresh_rows.items()):
+        base = base_rows.get(name)
+        if us is None or base is None or base <= 0:
+            continue
+        if us < args.min_us:
+            continue
+        ratio = us / base
+        marker = " <-- REGRESSION" if ratio > args.factor else ""
+        if ratio > args.factor or ratio < 1 / args.factor:
+            # print every big mover (speedups too: the perf trajectory)
+            print(f"  {name:42s} {base/1e3:10.1f}ms -> {us/1e3:10.1f}ms "
+                  f"({ratio:5.2f}x){marker}")
+        if ratio > args.factor:
+            violations.append((name, base, us, ratio))
+
+    ok = True
+    if errors:
+        print(f"FAIL: {len(errors)} errored row(s): {', '.join(errors)}")
+        ok = False
+    if fresh_failures:
+        print(f"FAIL: fresh run recorded {fresh_failures} bench failure(s)")
+        ok = False
+    if violations:
+        print(f"FAIL: {len(violations)} row(s) regressed more than "
+              f"{args.factor}x vs {baseline.name}")
+        ok = False
+    if ok:
+        shared = sum(1 for n in fresh_rows if n in base_rows)
+        print(f"OK: {shared} shared rows within {args.factor}x of baseline")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

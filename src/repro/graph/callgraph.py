@@ -116,12 +116,14 @@ class CallGraph:
         return cls.from_fleet_state(fs)
 
     @classmethod
-    def from_detections(cls, fleet: Dict[str, "object"],
-                        fail_close_edges: Set[Tuple[str, str]]
+    def from_detections(cls, fleet, fail_close_edges: Set[Tuple[str, str]]
                         ) -> "CallGraph":
         """Graph as the detection layers see it: every known RPC edge, with
-        fail-close exactly where runtime/static analysis flagged it."""
-        g = cls.from_specs(fleet)
+        fail-close exactly where runtime/static analysis flagged it.
+        Accepts either fleet representation (``Dict[str, ServiceSpec]`` or
+        ``FleetState``)."""
+        g = (cls.from_fleet_state(fleet) if isinstance(fleet, FleetState)
+             else cls.from_specs(fleet))
         idx = g.index
         flagged = np.asarray(
             [idx[c] * np.int64(g.n) + idx[d]
@@ -129,6 +131,23 @@ class CallGraph:
             np.int64)
         packed = g.src.astype(np.int64) * g.n + g.dst
         return dataclasses.replace(g, fail_open=~np.isin(packed, flagged))
+
+    @classmethod
+    def from_detection_mask(cls, fs: FleetState,
+                            fail_close: np.ndarray) -> "CallGraph":
+        """Array path of ``from_detections``: the runtime layer's edge mask
+        (aligned with ``fs.edges`` order, True = detector flagged the edge
+        fail-close) becomes the graph directly — no name sets, no packed-id
+        joins, just the CSR build."""
+        assert fs.edges is not None, "FleetState synthesized without edges"
+        e = fs.edges
+        fail_close = np.asarray(fail_close, bool)
+        assert fail_close.shape == e.src.shape, (fail_close.shape, e.n)
+        weight = e.weight if e.weight is not None else \
+            _edge_weights(fs.tier, e.src, e.dst)
+        return _build_csr(fs.n, e.src, e.dst, ~fail_close,
+                          np.asarray(weight, np.float32),
+                          fs.fclass <= AM, fs.fclass >= RL, list(fs.names))
 
 
 def _build_csr(n: int, src: np.ndarray, dst: np.ndarray,

@@ -20,8 +20,11 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+import jax.numpy as jnp
+
 from repro.graph.callgraph import CallGraph
-from repro.graph.propagation import blast_radius, certify
+from repro.graph.propagation import (_fixed_point, blast_radius, certify,
+                                     radius_counts)
 
 
 @dataclasses.dataclass
@@ -50,37 +53,59 @@ def plan_hardening(graph: CallGraph, batch: int = 64,
     caller stops breaking — with RPC volume as the tie-break, harden the
     top ``batch``, repeat.  Terminates because every round converts >= 1
     fail-close edge and certification needs only finitely many.
+
+    The greedy loop is dispatch-hoisted: the edge/criticality arrays are
+    uploaded to the device once and the two jitted propagation closures
+    (full-blackhole certify, batched frontier blast radius) are reused
+    across rounds — only the fail-close mask changes, updated in place on
+    both sides.  Each round costs one (1, n) fixed point, one
+    bucket-padded (B, n) fixed point for the whole frontier, and (n,)/(B,)
+    transfers; nothing is re-traced and no (B, n) boolean matrix ever
+    crosses the host boundary.
     """
-    g = graph
-    dark = graph.preemptible
+    dark = np.asarray(graph.preemptible, bool)
+    crit_live = graph.critical & ~dark
+    closed = ~graph.fail_open.copy()           # host mirror of the mask
+    src_d = jnp.asarray(graph.src)
+    dst_d = jnp.asarray(graph.dst)
+    crit_d = jnp.asarray(graph.critical)
+    closed_d = jnp.asarray(closed)
+    dark_d = jnp.asarray(dark[None, :])
     hardened: List[int] = []
     trajectory: List[Dict[str, int]] = []
     rounds = 0
     certified = False
     while rounds < max_rounds:
-        cert = certify(g, dark)
+        broken_d, _ = _fixed_point(dark_d, src_d, dst_d, closed_d)
+        broken = np.asarray(broken_d[0])
+        n_bc = int(np.count_nonzero(broken & crit_live))
         trajectory.append({"n_hardened": len(hardened),
-                           "n_broken_critical": cert.n_broken_critical})
-        if cert.ok:
+                           "n_broken_critical": n_bc})
+        if n_bc == 0:
             certified = True
             break
         rounds += 1
         # frontier: fail-close edges relaying breakage into a live caller
         # (hardening an edge whose caller is itself dark changes nothing)
-        frontier = np.flatnonzero(~g.fail_open & cert.broken[g.dst]
-                                  & ~dark[g.src])
+        frontier = np.flatnonzero(closed & broken[graph.dst]
+                                  & ~dark[graph.src])
         assert len(frontier) > 0, "broken criticals without a frontier edge"
-        callers = np.unique(g.src[frontier])
-        radius = blast_radius(g, sources=callers)
-        score = radius[g.src[frontier]].astype(np.float64)
+        callers = np.unique(graph.src[frontier])
+        counts = radius_counts(callers, graph.n, src_d, dst_d, closed_d,
+                               crit_d)
+        radius = np.zeros(graph.n, np.int32)
+        radius[callers] = counts
+        score = radius[graph.src[frontier]].astype(np.float64)
         # tie-break on traffic volume (normalized to < 1 so it never
         # outranks a whole extra critical service)
-        w = g.weight[frontier].astype(np.float64)
+        w = graph.weight[frontier].astype(np.float64)
         score += w / (w.max() + 1.0)
         pick = frontier[np.argsort(-score, kind="stable")[:batch]]
         hardened.extend(int(i) for i in pick)
-        g = g.harden(pick)
-    else:
+        closed[pick] = False
+        closed_d = closed_d.at[jnp.asarray(pick)].set(False)
+    g = graph.harden(hardened)
+    if not certified:
         # ran out of rounds after a harden — the last cert is stale
         certified = certify(g, dark).ok
     return HardeningPlan(

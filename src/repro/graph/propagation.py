@@ -29,9 +29,11 @@ import jax.numpy as jnp
 
 from repro.graph.callgraph import CallGraph
 
-# blast_radius pads source batches to multiples of this so jit compiles a
-# handful of shapes, not one per call
+# blast_radius pads source batches to multiples of _BUCKET (capped at
+# _CHUNK rows per propagation) so jit compiles a handful of shapes, not one
+# per call — and small source sets don't pay for a full 512-row batch
 _CHUNK = 512
+_BUCKET = 128
 
 
 @jax.jit
@@ -61,9 +63,43 @@ def _fixed_point(dark: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
     return broken, rounds
 
 
+@jax.jit
+def _radius_kernel(dark: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
+                   closed: jnp.ndarray, crit: jnp.ndarray):
+    """Batched blast-radius counts: propagate the (B, n) dark batch to its
+    fixed point and reduce to per-row broken-critical counts *on device*,
+    so only (B,) ints cross the host boundary (the (B, n) broken matrix
+    never does)."""
+    broken, _ = _fixed_point(dark, src, dst, closed)
+    return (broken & crit[None, :]).sum(axis=1).astype(jnp.int32)
+
+
 def _device_edges(graph: CallGraph):
     return (jnp.asarray(graph.src), jnp.asarray(graph.dst),
             jnp.asarray(~graph.fail_open))
+
+
+def radius_counts(sources: np.ndarray, n: int, src_d, dst_d, closed_d,
+                  crit_d) -> np.ndarray:
+    """Blast-radius counts for ``sources`` against device-resident edge
+    arrays — the reusable closure the hardening planner calls once per
+    greedy round (the device arrays are uploaded once, not per call).
+    Sources are swept in bucket-padded batches (multiples of _BUCKET up to
+    _CHUNK) through the jitted kernel; returns counts aligned with
+    ``sources``."""
+    sources = np.asarray(sources, np.int64)
+    out = np.zeros(len(sources), np.int32)
+    for lo in range(0, len(sources), _CHUNK):
+        chunk = sources[lo:lo + _CHUNK]
+        width = min(_CHUNK, _BUCKET * -(-len(chunk) // _BUCKET))
+        pad = np.full(width, chunk[-1], np.int64)
+        pad[:len(chunk)] = chunk
+        dark = np.zeros((width, n), bool)
+        dark[np.arange(width), pad] = True
+        counts = _radius_kernel(jnp.asarray(dark), src_d, dst_d,
+                                closed_d, crit_d)
+        out[lo:lo + len(chunk)] = np.asarray(counts)[:len(chunk)]
+    return out
 
 
 def propagate_many(graph: CallGraph, dark: np.ndarray
@@ -146,17 +182,9 @@ def blast_radius(graph: CallGraph,
     out = np.zeros(graph.n, np.int32)
     if len(sources) == 0:
         return out
-    crit = jnp.asarray(graph.critical)
-    edges = _device_edges(graph)
-    for lo in range(0, len(sources), _CHUNK):
-        chunk = sources[lo:lo + _CHUNK]
-        pad = np.full(_CHUNK, chunk[-1], np.int64)
-        pad[:len(chunk)] = chunk
-        dark = np.zeros((_CHUNK, graph.n), bool)
-        dark[np.arange(_CHUNK), pad] = True
-        broken, _ = _fixed_point(jnp.asarray(dark), *edges)
-        counts = (broken & crit[None, :]).sum(axis=1)
-        out[chunk] = np.asarray(counts)[:len(chunk)]
+    src_d, dst_d, closed_d = _device_edges(graph)
+    out[sources] = radius_counts(sources, graph.n, src_d, dst_d, closed_d,
+                                 jnp.asarray(graph.critical))
     return out
 
 

@@ -303,3 +303,137 @@ class ScalarOrchestrator:
         self.loop.schedule(self.CITY_WAVE_S * 6, reenable_terminate)
         self.loop.schedule(self.CITY_WAVE_S * 10, release_resources)
         self.loop.run()
+
+
+# ---------------------------------------------------------------------------
+# Scalar telemetry reference (the seed's runtime fail-close layer, kept
+# verbatim): one Python RPCRecord per RPC, a binary search per sample, a
+# dict update per record.  The array-native engine in
+# ``repro.core.dependency`` must (a) produce bit-identical per-edge counts
+# when ingesting the same record stream, and (b) match this pipeline's
+# precision/recall statistics when each samples its own stream.
+# ---------------------------------------------------------------------------
+
+import random
+from collections import defaultdict
+from typing import Iterable, Set, Tuple
+
+from repro.core.dependency import EdgeStats, RPCRecord
+
+
+def scalar_generate_traces(fleet: Dict[str, ServiceSpec],
+                           n_records: int = 200_000, seed: int = 0,
+                           ambient_callee_failure: float = 0.025,
+                           ambient_caller_error: float = 0.003,
+                           cold_path_fraction: float = 0.18):
+    """Seed implementation of ``generate_traces`` (reference)."""
+    from repro.core.service import _TABLE2
+    rng = random.Random(seed)
+    edges = [(s.name, d) for s in fleet.values() for d in s.deps]
+    if not edges:
+        return [], set()
+    unsafe = {(s.name, d) for s in fleet.values() for d in s.unsafe_deps()}
+    cold: Set[Tuple[str, str]] = {
+        e for e in unsafe if rng.random() < cold_path_fraction}
+    tier_of = {n: s.tier for n, s in fleet.items()}
+    cell_edges: Dict[Tuple[int, int], int] = {}
+    for caller, callee in edges:
+        cell = (int(tier_of[caller]), int(tier_of[callee]))
+        cell_edges[cell] = cell_edges.get(cell, 0) + 1
+    weights = []
+    for e in edges:
+        caller, callee = e
+        cell = (int(tier_of[caller]), int(tier_of[callee]))
+        vol = _TABLE2[tier_of[caller]][int(tier_of[callee])]
+        w = vol / cell_edges[cell]
+        weights.append(w * (0.01 if e in cold else 1.0))
+    tot = sum(weights)
+    cum = []
+    acc = 0.0
+    for w in weights:
+        acc += w
+        cum.append(acc)
+
+    records = []
+    for _ in range(n_records):
+        r = rng.uniform(0, tot)
+        lo, hi = 0, len(cum) - 1
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if cum[mid] < r:
+                lo = mid + 1
+            else:
+                hi = mid
+        caller, callee = edges[lo]
+        callee_failed = rng.random() < ambient_callee_failure
+        if (caller, callee) in unsafe:
+            caller_errored = (callee_failed and rng.random() < 0.92) or \
+                rng.random() < ambient_caller_error
+        else:
+            caller_errored = rng.random() < ambient_caller_error
+        records.append(RPCRecord(caller, callee, callee_failed,
+                                 caller_errored))
+    return records, cold
+
+
+class ScalarFailCloseDetector:
+    """Seed implementation of ``RuntimeFailCloseDetector`` (reference)."""
+
+    def __init__(self, min_failures: int = 5,
+                 propagation_threshold: float = 0.5,
+                 lift_threshold: float = 5.0):
+        self.stats: Dict[Tuple[str, str], EdgeStats] = defaultdict(EdgeStats)
+        self.min_failures = min_failures
+        self.propagation_threshold = propagation_threshold
+        self.lift_threshold = lift_threshold
+
+    def ingest(self, records: Iterable[RPCRecord]):
+        for r in records:
+            st = self.stats[(r.caller, r.callee)]
+            st.calls += 1
+            if r.callee_failed:
+                st.callee_failures += 1
+                if r.caller_errored:
+                    st.errors_given_failure += 1
+            elif r.caller_errored:
+                st.errors_given_ok += 1
+
+    def detect(self) -> Set[Tuple[str, str]]:
+        out: Set[Tuple[str, str]] = set()
+        for edge, st in self.stats.items():
+            if st.callee_failures < self.min_failures:
+                continue
+            p_fail = st.errors_given_failure / st.callee_failures
+            ok_calls = max(1, st.calls - st.callee_failures)
+            p_ok = st.errors_given_ok / ok_calls
+            if p_fail >= self.propagation_threshold and \
+                    p_fail >= self.lift_threshold * max(p_ok, 1e-4):
+                out.add(edge)
+        return out
+
+
+def scalar_runtime_analysis(fleet: Dict[str, ServiceSpec],
+                            n_records: Optional[int] = None,
+                            seed: int = 0) -> Dict[str, object]:
+    """Seed implementation of ``runtime_analysis`` (reference; graph build
+    omitted — the statistics are what the parity tests compare)."""
+    n_edges = sum(len(s.deps) for s in fleet.values())
+    if n_records is None:
+        n_records = 400 * max(1, n_edges)
+    records, cold = scalar_generate_traces(fleet, n_records, seed)
+    det = ScalarFailCloseDetector()
+    det.ingest(records)
+    found = det.detect()
+    truth = {(s.name, d) for s in fleet.values() for d in s.unsafe_deps()}
+    tp = found & truth
+    return {
+        "found": found,
+        "truth": truth,
+        "cold_paths": cold,
+        "true_positives": len(tp),
+        "false_positives": len(found - truth),
+        "missed": len(truth - found),
+        "missed_cold": len((truth - found) & cold),
+        "precision": len(tp) / max(1, len(found)),
+        "recall": len(tp) / max(1, len(truth)),
+    }

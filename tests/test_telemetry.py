@@ -1,0 +1,192 @@
+"""Array-native RPC telemetry engine vs the scalar reference.
+
+Three layers of pinning (mirroring how the fleet engine is pinned to the
+scalar orchestrator):
+
+  * exact: scatter-add (segment-sum) ingest must produce bit-identical
+    per-edge counts — and identical detections — to the scalar
+    dict-per-edge detector on the *same* record stream;
+  * statistical: the array sampler draws its own stream (different RNG),
+    so ``runtime_analysis`` must match the scalar pipeline's
+    precision/recall within a small epsilon on the same fleet;
+  * behavioral: cold paths (~100x less traffic) must stay under-observed —
+    the runtime layer's misses are exactly the cold-path defects the
+    static layer exists to catch.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.dependency import (RuntimeFailCloseDetector,
+                                   runtime_analysis, sample_traces,
+                                   trace_edges)
+from repro.core.fleet_state import synthesize_fleet_state
+from repro.core.service import synthesize_fleet, unsafe_edges
+from repro.graph import CallGraph
+
+from tests.scalar_reference import (ScalarFailCloseDetector,
+                                    scalar_generate_traces,
+                                    scalar_runtime_analysis)
+
+
+def _stats_dict(det):
+    return {k: (s.calls, s.callee_failures, s.errors_given_failure,
+                s.errors_given_ok) for k, s in det.stats.items()}
+
+
+# ---------------------------------------------------------------------------
+# exact parity on an identical record stream
+# ---------------------------------------------------------------------------
+
+
+def test_ingest_exact_parity_on_identical_stream():
+    fleet = synthesize_fleet(scale=0.02, seed=5, unsafe_fraction=0.3)
+    records, _ = scalar_generate_traces(fleet, 40_000, seed=2)
+    scalar = ScalarFailCloseDetector()
+    scalar.ingest(records)
+    arr = RuntimeFailCloseDetector()
+    arr.ingest(records)
+    assert _stats_dict(arr) == _stats_dict(scalar)
+    assert arr.detect() == scalar.detect()
+    assert arr.n_records == len(records)
+
+
+def test_detect_thresholds_match_scalar():
+    """Gate boundaries: not-enough-failures, propagation threshold, lift
+    over ambient — the jitted kernel and the scalar loop must agree."""
+    from repro.core.dependency import RPCRecord
+
+    recs = []
+    # edge A: 4 failures only (below min_failures=5) — never flagged
+    for i in range(80):
+        recs.append(RPCRecord("a", "low", i % 20 == 0, i % 20 == 0))
+    # edge B: plenty of failures, perfect propagation — flagged
+    for i in range(200):
+        recs.append(RPCRecord("a", "close", i % 10 == 0, i % 10 == 0))
+    # edge C: errors uncorrelated with failures (high ambient) — lift gate
+    for i in range(200):
+        recs.append(RPCRecord("a", "noisy", i % 10 == 0, i % 3 == 0))
+    scalar = ScalarFailCloseDetector()
+    scalar.ingest(recs)
+    arr = RuntimeFailCloseDetector()
+    arr.ingest(recs)
+    want = scalar.detect()
+    assert arr.detect() == want
+    assert ("a", "close") in want
+    assert ("a", "low") not in want and ("a", "noisy") not in want
+
+
+def test_ingest_batch_streaming_matches_one_shot():
+    """Evidence accumulated chunk-by-chunk == one-shot ingest of the full
+    stream (the streaming property runtime_analysis relies on)."""
+    fs = synthesize_fleet_state(scale=0.05, seed=3)
+    edges = trace_edges(fs, seed=0)
+    eid, failed, errored = sample_traces(edges, 90_000, seed=4)
+    one = RuntimeFailCloseDetector(edges=edges)
+    one.ingest_batch(eid, failed, errored)
+    chunked = RuntimeFailCloseDetector(edges=edges)
+    for lo in range(0, len(eid), 17_001):
+        sl = slice(lo, lo + 17_001)
+        chunked.ingest_batch(eid[sl], failed[sl], errored[sl])
+    for attr in ("calls", "callee_failures", "errors_given_failure",
+                 "errors_given_ok"):
+        assert (getattr(one, attr) == getattr(chunked, attr)).all(), attr
+    assert one.detect() == chunked.detect()
+
+
+# ---------------------------------------------------------------------------
+# statistical parity: each pipeline samples its own stream
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_analysis_matches_scalar_statistics():
+    fleet = synthesize_fleet(scale=0.05, seed=11, unsafe_fraction=0.2)
+    truth = set(unsafe_edges(fleet))
+    assert len(truth) >= 15            # enough edges for stable recall
+    ra = runtime_analysis(fleet, seed=11)
+    sc = scalar_runtime_analysis(fleet, seed=11)
+    assert ra["truth"] == sc["truth"] == truth
+    # no false positives on either path (lift gate vs 0.003 ambient)
+    assert ra["false_positives"] == 0
+    assert sc["false_positives"] == 0
+    assert abs(ra["recall"] - sc["recall"]) <= 0.2
+    # the misses are the under-observed cold paths on both pipelines
+    assert ra["missed"] == ra["missed_cold"]
+    assert sc["missed"] == sc["missed_cold"]
+
+
+def test_cold_paths_underobserved_and_are_the_misses():
+    """Cold unsafe edges carry ~100x less traffic, so they lack failure
+    evidence — the static layer's reason to exist (paper §6)."""
+    fleet = synthesize_fleet(scale=0.05, seed=11, unsafe_fraction=0.2)
+    ra = runtime_analysis(fleet, seed=11)
+    det = ra["detector"]
+    edges = trace_edges(fleet, seed=11)
+    cold, unsafe = edges.cold, edges.unsafe
+    hot_unsafe = unsafe & ~cold
+    if cold.any() and hot_unsafe.any():
+        cold_mean = det.calls[cold].mean()
+        hot_mean = det.calls[hot_unsafe].mean()
+        assert cold_mean < 0.05 * hot_mean
+    # every missed edge is cold, and every miss lacked failure evidence
+    missed = ra["truth"] - ra["found"]
+    assert missed <= ra["cold_paths"]
+    name_to_id = {k: i for i, k in enumerate(edges.edge_names)}
+    for e in missed:
+        assert det.callee_failures[name_to_id[e]] < det.min_failures
+    # hot unsafe edges with evidence are all found
+    for i in np.flatnonzero(hot_unsafe):
+        if det.callee_failures[i] >= det.min_failures:
+            assert edges.edge_names[i] in ra["found"]
+
+
+# ---------------------------------------------------------------------------
+# FleetState (array) path end to end
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_analysis_on_fleet_state_builds_detection_graph():
+    fs = synthesize_fleet_state(scale=0.05, seed=9, unsafe_fraction=0.2)
+    # small chunks force the multi-chunk streaming path
+    ra = runtime_analysis(fs, n_records=350_000, seed=9,
+                          chunk_records=100_000)
+    assert isinstance(ra["graph"], CallGraph)
+    # the detections ARE the graph the downstream layers consume
+    assert ra["graph"].unsafe_edge_keys() == ra["found"]
+    assert ra["false_positives"] == 0
+    assert ra["recall"] >= 0.5
+    truth_from_fs = {(fs.names[s], fs.names[d])
+                     for s, d, fo in zip(fs.edges.src, fs.edges.dst,
+                                         fs.edges.fail_open) if not fo}
+    assert ra["truth"] == truth_from_fs
+
+
+def test_detection_mask_graph_matches_name_set_builder():
+    """from_detection_mask (array path) == from_detections (name-set path)
+    on the same detections."""
+    fs = synthesize_fleet_state(scale=0.05, seed=9, unsafe_fraction=0.2)
+    edges = trace_edges(fs, seed=9)
+    mask = edges.unsafe.copy()           # "perfect detector"
+    g_mask = CallGraph.from_detection_mask(fs, mask)
+    g_set = CallGraph.from_detections(fs, edges.unsafe_keys())
+    assert g_mask.unsafe_edge_keys() == g_set.unsafe_edge_keys()
+    assert (g_mask.src == g_set.src).all()
+    assert (g_mask.fail_open == g_set.fail_open).all()
+
+
+def test_generate_traces_compat_roundtrip():
+    """The record-object compat layer and the array path describe the same
+    stream: re-ingesting materialized records reproduces the array
+    counts."""
+    fleet = synthesize_fleet(scale=0.02, seed=5, unsafe_fraction=0.3)
+    from repro.core.dependency import generate_traces
+    records, cold = generate_traces(fleet, 30_000, seed=3)
+    assert len(records) == 30_000
+    edges = trace_edges(fleet, seed=3)
+    assert cold == edges.cold_keys()
+    det_rec = RuntimeFailCloseDetector()
+    det_rec.ingest(records)
+    det_arr = RuntimeFailCloseDetector(edges=edges)
+    det_arr.ingest_batch(*sample_traces(edges, 30_000, seed=3))
+    want = {k: v for k, v in _stats_dict(det_arr).items()}
+    assert _stats_dict(det_rec) == want
