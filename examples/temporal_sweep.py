@@ -1,0 +1,96 @@
+"""Temporal scenario ensemble: execute failure *timelines*, not point
+estimates.
+
+Synthesizes a Tables-1-3 fleet, then runs the discrete-time failover
+kernel (``repro.core.timeline_sim``) vmapped over the 256-scenario grid
+with the dependency-graph propagation verdicts folded into the
+availability trace — per-scenario time-to-restore per tier, the
+availability integral against the 99.97% SLA, and the peak on-demand
+cloud draw, alongside the analytic closed-form verdicts.
+
+  PYTHONPATH=src python examples/temporal_sweep.py
+"""
+
+import numpy as np
+
+from repro.core.scenarios import (operating_point_mask, scenario_grid,
+                                  summarize_sweep,
+                                  sweep_with_dependency_ensemble)
+from repro.core.service import synthesize_fleet
+from repro.core.tiers import Tier
+from repro.graph import CallGraph, plan_hardening
+
+
+def main():
+    fs = synthesize_fleet(scale=0.1, seed=7, as_arrays=True,
+                          unsafe_chain_fraction=0.02)
+    fs.apply_ufa_target_classes()
+    print(f"fleet: {fs.n} service-environments, "
+          f"{float(fs.spec_cores.sum()):,.0f} cores")
+
+    grid = scenario_grid()
+
+    # 1. the un-remediated fleet: fail-close chains break criticals in
+    #    every blackhole scenario, sinking the availability trace
+    res0 = sweep_with_dependency_ensemble(fs, grid=grid, temporal=True)
+    print(f"\nbefore hardening: t_sla_ok="
+          f"{int(res0['t_sla_ok'].sum())}/{len(res0['t_sla_ok'])} "
+          f"worst avail integral "
+          f"{float(res0['t_availability_mean'].min()):.5f}")
+
+    # 2. harden: greedily fail-open the highest-blast-radius unsafe edges
+    #    until the full blackhole certifies (paper's 4,000+ conversions)
+    graph = CallGraph.from_fleet_state(fs)
+    plan = plan_hardening(graph)
+    # plan indices are CSR positions; map back to FleetState edge order
+    fs.edges.fail_open[graph.input_edge_indices(plan.hardened_edges)] = True
+    print(f"hardened {plan.n_hardened} edges in {plan.rounds} rounds "
+          f"(certified={plan.certified})")
+
+    # 3. the hardened fleet, same temporal ensemble
+    res = sweep_with_dependency_ensemble(fs, grid=grid, temporal=True)
+    summary = summarize_sweep(res)
+    print("\n== ensemble digest (analytic + temporal, hardened fleet) ==")
+    for k, v in summary.items():
+        print(f"  {k:32s} {v}")
+
+    print("\n== analytic vs temporal disagreements ==")
+    diff = np.flatnonzero(res["sla_ok"] != res["t_sla_ok"])
+    print(f"  {len(diff)} of {len(res['sla_ok'])} scenarios differ")
+    for i in diff[:5]:
+        print(f"  mult={res['traffic_mult'][i]:.1f} "
+              f"burst_avail={res['burst_availability'][i]:.2f} "
+              f"quota={res['cloud_quota_frac'][i]:.2f} "
+              f"evict={res['evict_fraction'][i]:.2f}: "
+              f"analytic={bool(res['sla_ok'][i])} "
+              f"temporal={bool(res['t_sla_ok'][i])} "
+              f"t_rl_done={res['t_rl_done_s'][i]/60.0:.1f}min")
+
+    print("\n== worst temporal scenarios (availability integral) ==")
+    order = np.argsort(res["t_availability_mean"])[:5]
+    for i in order:
+        ttr = res["t_time_to_restore_s"][i]
+        t3 = ttr[int(Tier.T3)]
+        print(f"  avail_mean={res['t_availability_mean'][i]:.5f} "
+              f"mult={res['traffic_mult'][i]:.1f} "
+              f"burst_avail={res['burst_availability'][i]:.2f} "
+              f"quota={res['cloud_quota_frac'][i]:.2f} "
+              f"dep_broken={res['dep_broken_frac'][i]:.3f} "
+              f"T3_restore={'never' if np.isinf(t3) else f'{t3/60:.0f}min'} "
+              f"peak_cloud={res['t_peak_cloud_cores'][i]:,.0f}")
+
+    op = operating_point_mask(res)
+    i = int(np.flatnonzero(op)[0])
+    print("\n== paper operating point, per-tier time-to-restore ==")
+    for t in Tier:
+        v = res["t_time_to_restore_s"][i][int(t)]
+        label = ("never (until failback)" if np.isinf(v)
+                 else "no interruption" if v == 0.0 else f"{v/60.0:.1f} min")
+        print(f"  {t.name:3s} {label}")
+    print(f"  availability integral: "
+          f"{res['t_availability_mean'][i]:.5f} (SLA 0.9997) "
+          f"temporal_sla_ok={bool(res['t_sla_ok'][i])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -105,20 +105,38 @@ SEState = SEView   # seed-name compat
 
 @dataclasses.dataclass
 class Timeline:
+    """Snapshot log: every series stays aligned with ``t``.
+
+    A metric may join mid-run (e.g. ``burst_online`` only appears during
+    the conversion ramp): its series is NaN-backfilled for the snapshots
+    it missed, and NaN-padded whenever a later snapshot omits it, so
+    ``as_arrays`` always returns equal-length arrays — never ragged."""
     t: List[float] = dataclasses.field(default_factory=list)
     series: Dict[str, List[float]] = dataclasses.field(default_factory=dict)
 
     def snap(self, now: float, **metrics: float):
         self.t.append(now)
+        n = len(self.t)
         for k, v in metrics.items():
-            self.series.setdefault(k, []).append(v)
+            col = self.series.get(k)
+            if col is None:
+                col = [float("nan")] * (n - 1)
+                self.series[k] = col
+            col.append(float(v))
+        for col in self.series.values():
+            if len(col) < n:
+                col.append(float("nan"))
 
     def at(self, key: str) -> List[Tuple[float, float]]:
-        return list(zip(self.t, self.series[key]))
+        return [(t, v) for t, v in zip(self.t, self.series[key])
+                if v == v]          # skip NaN (snapshots without this key)
 
     def as_arrays(self) -> Dict[str, np.ndarray]:
-        out = {"t": np.asarray(self.t)}
-        out.update({k: np.asarray(v) for k, v in self.series.items()})
+        """Deterministically ordered (``t`` first, then sorted keys),
+        every array aligned to ``len(t)``."""
+        out = {"t": np.asarray(self.t, np.float64)}
+        for k in sorted(self.series):
+            out[k] = np.asarray(self.series[k], np.float64)
         return out
 
 
@@ -222,6 +240,17 @@ class Orchestrator:
         taken_sl = _first_fit(cores[sl_idx], self.region.steady.stateless.free)
         fs.pool[sl_idx[taken_sl]] = POOL_STATELESS
         self.region.steady.stateless.used += float(cores[sl_idx[taken_sl]].sum())
+
+    # ------------------------------------------------------------------
+    def timeline_config(self):
+        """Extract the aggregate inputs the array-native timeline kernel
+        (``repro.core.timeline_sim``) needs so that the ``lax.scan``
+        simulator and this orchestrator consume *identical* state: class
+        core totals, the post-placement pool occupancy (including the
+        overcommit-spill split), batch/cloud sizing and the wave/ramp
+        tunables.  Call in steady state (before ``failover``)."""
+        from repro.core.timeline_sim import extract_timeline_config
+        return extract_timeline_config(self)
 
     # ------------------------------------------------------------------
     def class_cores(self, fc: FailureClass, placement: Optional[str] = None

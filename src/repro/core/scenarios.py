@@ -95,6 +95,17 @@ def scenario_grid(traffic_mult=(1.6, 1.8, 2.0, 2.2),
     return {k: cols[i] for i, k in enumerate(axes)}
 
 
+def operating_point_mask(grid: Dict[str, np.ndarray]) -> np.ndarray:
+    """Boolean mask selecting the paper's operating point in a scenario
+    grid: 2x traffic, normal preheat, full burst, full cloud quota, full
+    eviction — the single scenario the event-driven orchestrator runs."""
+    return ((np.asarray(grid["traffic_mult"]) == 2.0)
+            & (np.asarray(grid["burst_delay_s"]) == 270.0)
+            & (np.asarray(grid["burst_availability"]) == 1.0)
+            & (np.asarray(grid["cloud_quota_frac"]) == 1.0)
+            & (np.asarray(grid["evict_fraction"]) == 1.0))
+
+
 def _scenario_outcome(consts: Dict[str, jnp.ndarray], p: Dict[str, jnp.ndarray]):
     """SLA outcome of ONE scenario (all scalars — vmapped over the grid)."""
     ao, am = consts["ao"], consts["am"]
@@ -198,14 +209,23 @@ _sweep_jit = jax.jit(jax.vmap(_scenario_outcome, in_axes=(None, 0)))
 
 def sweep_scenarios(agg: FleetAggregates,
                     grid: Optional[Dict[str, np.ndarray]] = None,
-                    dep_broken_frac: Optional[np.ndarray] = None
+                    dep_broken_frac: Optional[np.ndarray] = None,
+                    timeline: Optional[object] = None,
+                    ts: Optional[np.ndarray] = None
                     ) -> Dict[str, np.ndarray]:
     """Evaluate the failover model over every scenario in one vmap.
 
     dep_broken_frac: optional per-scenario fraction of critical services
     the dependency-graph blackhole propagation says break (see
     ``sweep_with_dependency_ensemble``); defaults to 0 everywhere (a fully
-    hardened fleet)."""
+    hardened fleet).
+
+    timeline: optional ``timeline_sim.TimelineConfig`` — also runs the
+    vmapped discrete-time timeline kernel over the same grid and merges
+    its *temporal* verdicts (per-tier time-to-restore, availability
+    integral vs 99.97%, peak on-demand cloud draw, temporal SLA) under
+    ``t_``-prefixed keys alongside the analytic ones.  ``ts`` overrides
+    the default 2h/240-step grid."""
     grid = grid if grid is not None else scenario_grid()
     n = len(next(iter(grid.values())))
     consts = {"ao": jnp.asarray(agg.ao_cores, jnp.float32),
@@ -221,13 +241,22 @@ def sweep_scenarios(agg: FleetAggregates,
     out = _sweep_jit(consts, params)
     result = {k: np.asarray(v) for k, v in out.items()}
     result.update({k: np.asarray(v) for k, v in grid.items()})
+    if timeline is not None:
+        from repro.core.timeline_sim import sweep_timeline
+        tres = sweep_timeline(timeline, grid=grid, ts=ts,
+                              dep_broken_frac=np.asarray(dep_broken_frac))
+        result.update({f"t_{k}": v for k, v in tres.items()})
     return result
 
 
 def sweep_with_dependency_ensemble(fs: FleetState,
                                    grid: Optional[Dict[str, np.ndarray]]
                                    = None,
-                                   seed: int = 0) -> Dict[str, np.ndarray]:
+                                   seed: int = 0,
+                                   temporal: bool = False,
+                                   region: Optional[object] = None,
+                                   ts: Optional[np.ndarray] = None
+                                   ) -> Dict[str, np.ndarray]:
     """Scenario sweep with the dependency layer closed in: each scenario's
     ``evict_fraction`` sets its blackhole intensity — that fraction of
     preemptible services goes dark, with the uniform draws shared across
@@ -235,15 +264,27 @@ def sweep_with_dependency_ensemble(fs: FleetState,
     fractions give *nested* sets (vary the grid's ``evict_fraction`` axis
     for ensemble diversity).  One batched multi-hop propagation certifies
     the whole ensemble and the per-scenario broken-critical fractions feed
-    the availability estimate/SLA verdicts."""
+    the availability estimate/SLA verdicts.
+
+    temporal=True additionally runs the discrete-time timeline kernel
+    over the grid (sizing a region for ``fs`` unless ``region`` is given)
+    and folds the same propagation verdicts into the availability
+    *trace*: a broken critical's penalty decays as its dark dependencies
+    restore, and the ``t_``-prefixed temporal verdicts land next to the
+    analytic ones."""
     from repro.graph import CallGraph, blackhole_ensemble
     grid = grid if grid is not None else scenario_grid()
     graph = CallGraph.from_fleet_state(fs)
     ens = blackhole_ensemble(graph, seed=seed,
                              fractions=np.asarray(grid["evict_fraction"]))
     agg = FleetAggregates.from_fleet_state(fs)
+    timeline = None
+    if temporal:
+        from repro.core.timeline_sim import config_for_fleet
+        timeline = config_for_fleet(fs, region=region)
     result = sweep_scenarios(agg, grid,
-                             dep_broken_frac=ens["broken_critical_frac"])
+                             dep_broken_frac=ens["broken_critical_frac"],
+                             timeline=timeline, ts=ts)
     result["dep_n_broken_critical"] = np.asarray(ens["n_broken_critical"])
     result["dep_n_dark"] = np.asarray(ens["n_dark"])
     return result
@@ -265,6 +306,19 @@ def summarize_sweep(result: Dict[str, np.ndarray]) -> Dict[str, object]:
         out["n_dep_ok"] = int(result["dep_ok"].sum())
         out["worst_dep_broken_frac"] = float(
             result["dep_broken_frac"].max())
+    if "t_sla_ok" in result:        # temporal verdicts present
+        finite = result["t_rl_done_s"][np.isfinite(result["t_rl_done_s"])]
+        out["n_t_sla_ok"] = int(result["t_sla_ok"].sum())
+        out["n_analytic_temporal_agree"] = int(
+            (result["sla_ok"] == result["t_sla_ok"]).sum())
+        out["t_availability_mean_min"] = float(
+            result["t_availability_mean"].min())
+        out["t_worst_finite_rl_done_min"] = (
+            float(finite.max() / 60.0) if len(finite) else float("nan"))
+        out["t_n_rl_never_restored"] = int(
+            np.isinf(result["t_rl_done_s"]).sum())
+        out["t_peak_cloud_cores_max"] = float(
+            result["t_peak_cloud_cores"].max())
     return out
 
 

@@ -1,0 +1,579 @@
+"""Array-native discrete-time failover timeline simulator.
+
+The paper's headline claims are *temporal* — full-peak failovers preempt
+Restore-Later services and restore them under differentiated SLAs while
+the fleet sustains 99.97% availability — but the vmapped sweep in
+``scenarios.py`` scores each scenario with a closed-form outcome, and the
+event-driven ``omg.Orchestrator`` produces a real timeline only one
+scenario at a time.  This module closes that gap: a ``jax.lax.scan`` over
+time steps evolves the per-tier live cores, placed-pool accounting,
+burst-conversion ramp, Always-On upscale, Active-Migrate migration waves,
+Restore-Later eviction and the delayed cloud restore (honoring
+``CloudPool.provision_time`` semantics: a cloud batch activates only after
+``grant / provision_rate`` seconds), emitting availability / utilization /
+SLA traces per step.  ``vmap`` over the existing ``scenario_grid`` runs
+thousands of temporal drills per second — scenario diversity the scalar
+orchestrator cannot reach (Basiri et al.: dependability claims must be
+validated by executing failure timelines against an SLA model).
+
+Equivalence contract (pinned by ``tests/test_timeline_sim.py``):
+
+  * the kernel's per-step traces match the scalar reference stepper in
+    ``tests/scalar_reference.py`` (same spec, independent Python-loop
+    implementation) to float32 precision, env counts and verdicts exactly;
+  * on a config extracted from an ``Orchestrator`` (via
+    ``Orchestrator.timeline_config()``) the traces match the
+    orchestrator's ``Timeline`` snapshots at the snapshot times, for
+    fleets where the aggregate view is exact (single migration/restore
+    waves, no pool overflow) — which covers every small-fleet test mix.
+
+Aggregation semantics (documented deviations from the event loop):
+
+  * multi-wave migrations/restores move ``total / n_waves`` cores per
+    wave (the orchestrator first-fits concrete SEs in array order);
+  * all cloud spill is treated as one provisioning batch that activates
+    at ``first_spill_wave + grant / rate`` (the orchestrator provisions
+    per wave; exact when the spill is confined to one wave);
+  * a cloud-quota shortfall leaves the remainder down for the whole
+    horizon (``rl_done_s = inf``) — the seed orchestrator stops retrying
+    but still stamps a completion time.
+
+All time comparisons use a ``EPS_T`` = 1e-3 s tolerance so float32 event
+arithmetic cannot miss a boundary the float64 event loop hits exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fleet_state import (AM, AO, POOL_OVERCOMMIT, POOL_STATELESS,
+                                    RL, TM)
+from repro.core.tiers import (QOS_EVICT_UTILIZATION, RTO_SECONDS,
+                              FailureClass, Tier)
+
+EPS_T = 1e-3                    # time-comparison tolerance (seconds)
+N_TIERS = len(Tier)
+N_CLASSES = 4
+BASE_AVAILABILITY = 0.9997      # ambient (paper Fig 8)
+AVAIL_SLA_TOL = 5e-5            # integral may dip this far below ambient
+RESTORE_THRESH = 0.999          # tier counts as restored above this frac
+
+_DEMAND_CRIT = 0.62             # demand per live core, critical classes
+_DEMAND_PRE = 0.35              # demand per live core, preemptible classes
+
+
+# ---------------------------------------------------------------------------
+# Config extraction — the scan kernel and the Orchestrator consume
+# identical inputs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TimelineConfig:
+    """Aggregate fleet/region state the timeline kernel simulates over.
+
+    Produced by ``extract_timeline_config`` from a steady-state
+    ``Orchestrator`` (post-placement), so pool occupancy — including the
+    overcommit-spill split the orchestrator tracks per SE — is identical
+    between the event loop and the scan kernel."""
+    # class aggregates (spec cores; live == spec in steady state)
+    ao_cores: float
+    am_cores: float
+    rl_cores: float
+    tm_cores: float
+    am_envs: float
+    rl_envs: float
+    tm_envs: float
+    # (n_tiers, n_classes) spec cores — per-tier live-core traces
+    tier_class_cores: np.ndarray
+    # steady pools, post-placement
+    stateless_cap: float
+    overcommit_cap: float
+    steady_used0: float
+    overcommit_used0: float
+    oc_preempt_cores: float     # preemptible cores accounted in overcommit
+    sl_preempt_cores: float     # preemptible overflow spilled to stateless
+    am_stateless_cores: float   # AM cores accounted in the stateless pool
+    # batch -> burst conversion
+    burst_cap_full: float
+    spawn_rate: float           # cores/s once conversion starts
+    # cloud (§4.6)
+    cloud_quota: float
+    cloud_rate: float
+    phys_cores: float
+    # orchestrator tunables (single-sourced from Orchestrator at extract)
+    kill_s: float = 5.0
+    preheat_s: float = 270.0
+    mbb_wave_s: float = 45.0
+    mbb_parallelism: float = 2000.0
+    rl_wave_s: float = 120.0
+    rl_rto_s: float = float(RTO_SECONDS[FailureClass.RESTORE_LATER])
+
+    def as_consts(self) -> Dict[str, jnp.ndarray]:
+        """float32 device constants for the jitted kernel."""
+        f = lambda v: jnp.asarray(v, jnp.float32)
+        return {
+            "ao": f(self.ao_cores), "am": f(self.am_cores),
+            "rl": f(self.rl_cores), "tm": f(self.tm_cores),
+            "am_envs": f(self.am_envs), "rl_envs": f(self.rl_envs),
+            "tm_envs": f(self.tm_envs),
+            "tier_class": f(self.tier_class_cores),
+            "stateless_cap": f(self.stateless_cap),
+            "overcommit_cap": f(self.overcommit_cap),
+            "steady_used0": f(self.steady_used0),
+            "overcommit_used0": f(self.overcommit_used0),
+            "oc_preempt_cores": f(self.oc_preempt_cores),
+            "sl_preempt_cores": f(self.sl_preempt_cores),
+            "am_stateless_cores": f(self.am_stateless_cores),
+            "burst_cap_full": f(self.burst_cap_full),
+            "spawn_rate": f(self.spawn_rate),
+            "cloud_quota": f(self.cloud_quota),
+            "cloud_rate": f(self.cloud_rate),
+            "phys_cores": f(self.phys_cores),
+            "kill_s": f(self.kill_s), "preheat_s": f(self.preheat_s),
+            "mbb_wave_s": f(self.mbb_wave_s),
+            "mbb_parallelism": f(self.mbb_parallelism),
+            "rl_wave_s": f(self.rl_wave_s), "rl_rto_s": f(self.rl_rto_s),
+        }
+
+
+def extract_timeline_config(orch) -> TimelineConfig:
+    """Read a steady-state ``Orchestrator`` into a ``TimelineConfig``.
+
+    Must run before ``failover()``: it captures the post-placement,
+    pre-eviction pool occupancy the event loop starts from."""
+    fs, region = orch.fs, orch.region
+    cores = fs.spec_cores
+    cls = [float(cores[fs.fclass == c].sum()) for c in (AO, AM, RL, TM)]
+    tier_class = np.zeros((N_TIERS, N_CLASSES), np.float64)
+    for t in range(N_TIERS):
+        tmask = fs.tier == t
+        for c in range(N_CLASSES):
+            tier_class[t, c] = float(cores[tmask & (fs.fclass == c)].sum())
+    pre = fs.preemptible
+    return TimelineConfig(
+        ao_cores=cls[0], am_cores=cls[1], rl_cores=cls[2], tm_cores=cls[3],
+        am_envs=float(np.count_nonzero(fs.fclass == AM)),
+        rl_envs=float(np.count_nonzero(fs.fclass == RL)),
+        tm_envs=float(np.count_nonzero(fs.fclass == TM)),
+        tier_class_cores=tier_class,
+        stateless_cap=float(region.steady.stateless.capacity),
+        overcommit_cap=float(region.steady.overcommit.capacity),
+        steady_used0=float(region.steady.stateless.used),
+        overcommit_used0=float(region.steady.overcommit.used),
+        oc_preempt_cores=float(
+            cores[pre & (fs.pool == POOL_OVERCOMMIT)].sum()),
+        sl_preempt_cores=float(
+            cores[pre & (fs.pool == POOL_STATELESS)].sum()),
+        am_stateless_cores=float(
+            cores[(fs.fclass == AM) & (fs.pool == POOL_STATELESS)].sum()),
+        burst_cap_full=float(region.batch.convertible_cores),
+        spawn_rate=float(orch.SPAWN_CORES_PER_HOST_S * region.batch.n_hosts),
+        cloud_quota=float(region.cloud.quota_cores),
+        cloud_rate=float(region.cloud.provision_rate_cores_per_s),
+        phys_cores=float(region.steady.physical_cores),
+        kill_s=float(orch.KILL_LATENCY_S),
+        preheat_s=float(orch.BATCH_EVICT_S + orch.PREFETCH_S),
+        mbb_wave_s=float(orch.MBB_WAVE_S),
+        mbb_parallelism=float(orch.MBB_PARALLELISM),
+        rl_wave_s=float(orch.RL_RESTORE_WAVE_S),
+    )
+
+
+def config_for_fleet(fleet, region=None) -> TimelineConfig:
+    """Build a ``TimelineConfig`` for a fleet (dict of ``ServiceSpec`` or a
+    ``FleetState``): sizes a fresh region (unless given), performs the
+    orchestrator's steady-state placement, extracts.
+
+    Side-effect free for the caller: placement runs against a *copy* of
+    the region (pool counters zeroed first, so a region that already had
+    an orchestrator placed into it is not double-counted) and a
+    ``FleetState``'s ``pool`` column is restored afterwards.  To extract
+    from live orchestrator state instead, use
+    ``Orchestrator.timeline_config()``."""
+    import copy
+
+    from repro.core.capacity import RegionCapacity
+    from repro.core.omg import Orchestrator
+    if region is None:
+        region = RegionCapacity.for_fleet("timeline", fleet)
+    else:
+        region = copy.deepcopy(region)
+        region.steady.stateless.used = 0.0
+        region.steady.overcommit.used = 0.0
+    pool_save = fleet.pool.copy() if hasattr(fleet, "pool") else None
+    try:
+        return extract_timeline_config(Orchestrator(fleet, region))
+    finally:
+        if pool_save is not None:
+            fleet.pool[:] = pool_save
+
+
+# ---------------------------------------------------------------------------
+# Scenario parameters
+# ---------------------------------------------------------------------------
+
+PARAM_KEYS = ("traffic_mult", "burst_delay_s", "burst_availability",
+              "cloud_quota_frac", "overcommit_factor", "evict_fraction",
+              "dep_broken_frac")
+
+
+def default_scenario(**overrides) -> Dict[str, float]:
+    """The paper's operating point (2x traffic, full burst, full quota)."""
+    p = {"traffic_mult": 2.0, "burst_delay_s": 270.0,
+         "burst_availability": 1.0, "cloud_quota_frac": 1.0,
+         "overcommit_factor": 1.5, "evict_fraction": 1.0,
+         "dep_broken_frac": 0.0}
+    p.update(overrides)
+    return p
+
+
+def default_ts(horizon_s: float = 7200.0, n_steps: int = 240) -> np.ndarray:
+    """Uniform step grid from 0: long enough to see the RL RTO expire."""
+    return np.arange(n_steps, dtype=np.float64) * (horizon_s / n_steps)
+
+
+# ---------------------------------------------------------------------------
+# The kernel: schedule arithmetic + per-step state + lax.scan
+# ---------------------------------------------------------------------------
+
+
+def _schedule(c: Dict, p: Dict) -> Dict:
+    """Scenario-level event times and capacity splits (scalar, traceable)."""
+    mult = p["traffic_mult"]
+    evict = p["evict_fraction"]
+
+    burst_cap = c["burst_cap_full"] * p["burst_availability"]
+    ramp_total = burst_cap / jnp.maximum(c["spawn_rate"], 1e-9)
+    tick_s = ramp_total / 10.0
+    burst_full_t = p["burst_delay_s"] + ramp_total
+
+    n_am_waves = jnp.ceil(c["am_envs"] / c["mbb_parallelism"])
+    am_done_t = burst_full_t + n_am_waves * c["mbb_wave_s"]
+    am_in_burst = jnp.minimum(c["am"], burst_cap)
+
+    ao_need = c["ao"] * (mult - 1.0)
+    # steady free once the preemptible spill is evicted and AM released
+    am_release_frac = c["am_stateless_cores"] / jnp.maximum(c["am"], 1e-9)
+    am_released = am_in_burst * am_release_frac
+    free_at_am_done = (c["stateless_cap"]
+                       - (c["steady_used0"] - evict * c["sl_preempt_cores"]
+                          - am_released))
+    ao_ok = ao_need <= free_at_am_done + 1e-6
+    ao_short = jnp.maximum(0.0, ao_need - free_at_am_done)
+
+    rl_need = c["rl"] * evict
+    rl_envs_evicted = c["rl_envs"] * evict
+    n_rl_waves = jnp.maximum(
+        1.0, jnp.ceil(rl_envs_evicted / c["mbb_parallelism"]))
+    rl_last_wave_t = burst_full_t + n_rl_waves * c["rl_wave_s"]
+    burst_free_rl = jnp.maximum(0.0, burst_cap - am_in_burst)
+    quota_eff = c["cloud_quota"] * p["cloud_quota_frac"]
+    total_cloud = jnp.minimum(
+        jnp.maximum(0.0, rl_need - burst_free_rl), quota_eff)
+    per_wave = rl_need / n_rl_waves
+    k_star = jnp.minimum(
+        jnp.floor(burst_free_rl / jnp.maximum(per_wave, 1e-9)) + 1.0,
+        n_rl_waves)
+    cloud_start_t = burst_full_t + k_star * c["rl_wave_s"]
+    cloud_arrival_t = cloud_start_t + total_cloud / jnp.maximum(
+        c["cloud_rate"], 1e-9)
+    rl_shortfall = jnp.maximum(0.0, rl_need - burst_free_rl - quota_eff)
+    rl_done_t = jnp.where(
+        rl_shortfall > 1e-6, jnp.inf,
+        jnp.maximum(rl_last_wave_t,
+                    jnp.where(total_cloud > 1e-6, cloud_arrival_t, 0.0)))
+
+    return {"burst_cap": burst_cap, "tick_s": tick_s,
+            "burst_full_t": burst_full_t,
+            "n_am_waves": n_am_waves, "am_done_t": am_done_t,
+            "am_in_burst": am_in_burst,
+            "am_release_frac": am_release_frac,
+            "ao_need": ao_need, "ao_ok": ao_ok, "ao_short": ao_short,
+            "rl_need": rl_need, "rl_envs_evicted": rl_envs_evicted,
+            "n_rl_waves": n_rl_waves, "rl_last_wave_t": rl_last_wave_t,
+            "burst_free_rl": burst_free_rl, "quota_eff": quota_eff,
+            "total_cloud": total_cloud, "cloud_start_t": cloud_start_t,
+            "cloud_arrival_t": cloud_arrival_t,
+            "rl_shortfall": rl_shortfall, "rl_done_t": rl_done_t}
+
+
+def _instant(c: Dict, p: Dict, s: Dict, t) -> Dict:
+    """All per-step series at time ``t`` (pure function of the schedule —
+    the scan carry layers accumulators/first-crossings on top)."""
+    mult = p["traffic_mult"]
+    evicted = (t >= c["kill_s"] - EPS_T)
+    e = jnp.where(evicted, p["evict_fraction"], 0.0)
+
+    # burst conversion ramp (10 spawner ticks, orchestrator semantics)
+    ticks = jnp.clip(jnp.floor((t - p["burst_delay_s"] + EPS_T)
+                               / jnp.maximum(s["tick_s"], 1e-9)), 0.0, 10.0)
+    burst_online = s["burst_cap"] * ticks / 10.0
+    burst_capacity = jnp.where(t >= p["burst_delay_s"] - EPS_T,
+                               s["burst_cap"], 0.0)
+
+    # Active-Migrate MBB waves into burst
+    am_waves_done = jnp.clip(
+        jnp.floor((t - s["burst_full_t"] + EPS_T) / c["mbb_wave_s"]),
+        0.0, s["n_am_waves"])
+    am_envs_moved = jnp.minimum(c["am_envs"],
+                                c["mbb_parallelism"] * am_waves_done)
+    am_attempt = c["am"] * am_envs_moved / jnp.maximum(c["am_envs"], 1.0)
+    am_moved = jnp.minimum(am_attempt, s["burst_cap"])
+
+    # Always-On in-place upscale at migration completion
+    ao_scaled = s["ao_ok"] & (t >= s["am_done_t"] - EPS_T)
+    ao_live = c["ao"] * jnp.where(ao_scaled, mult, 1.0)
+    ao_extra = jnp.where(ao_scaled, s["ao_need"], 0.0)
+
+    # Restore-Later waves: burst first, the cloud batch after provisioning
+    rl_waves_done = jnp.clip(
+        jnp.floor((t - s["burst_full_t"] + EPS_T) / c["rl_wave_s"]),
+        0.0, s["n_rl_waves"])
+    processed = s["rl_need"] * rl_waves_done / s["n_rl_waves"]
+    rl_burst = jnp.minimum(processed, s["burst_free_rl"])
+    cloud_req = processed - rl_burst
+    cloud_prov = jnp.minimum(cloud_req, s["quota_eff"])
+    cloud_live = jnp.minimum(
+        jnp.where(t >= s["cloud_arrival_t"] - EPS_T, s["total_cloud"], 0.0),
+        cloud_prov)
+    rl_restored = rl_burst + cloud_live
+    rl_live = c["rl"] - e * c["rl"] + rl_restored
+    tm_live = c["tm"] * (1.0 - e)
+
+    # placed-pool accounting
+    steady_used = (c["steady_used0"] - e * c["sl_preempt_cores"]
+                   - am_moved * s["am_release_frac"] + ao_extra)
+    overcommit_used = c["overcommit_used0"] - e * c["oc_preempt_cores"]
+    burst_used = am_moved + rl_burst
+
+    # env-count series (orchestrator snapshot names)
+    am_bursted = am_envs_moved
+    am_steady = c["am_envs"] - am_bursted
+    rl_bursted = jnp.round(s["rl_envs_evicted"] * rl_restored
+                           / jnp.maximum(s["rl_need"], 1e-9))
+    rl_not_bursted = jnp.round(e * c["rl_envs"]) - rl_bursted
+    rl_t_steady = jnp.round((1.0 - e) * (c["rl_envs"] + c["tm_envs"]))
+    terminated = jnp.round(e * c["tm_envs"])
+
+    # utilization, orchestrator-mirror (traffic multiplier on survivors)
+    am_steady_cores = c["am"] - am_moved
+    pre_steady = (c["rl"] + c["tm"]) * (1.0 - e)
+    busy = (ao_live * _DEMAND_CRIT * mult
+            + am_steady_cores * _DEMAND_CRIT * mult
+            + pre_steady * _DEMAND_PRE)
+    utilization = jnp.minimum(1.0, busy / jnp.maximum(c["phys_cores"], 1.0))
+
+    # demand-model utilization (drives the SLA verdict / QoS penalty):
+    # Always-On busy is constant — the upscale spreads 2x demand over 2x
+    # cores — while unmigrated AM absorbs the multiplier on 1x cores
+    busy_model = (c["ao"] * _DEMAND_CRIT * mult
+                  + am_steady_cores * _DEMAND_CRIT * mult
+                  + pre_steady * _DEMAND_PRE)
+    util_model = jnp.minimum(
+        1.0, busy_model / jnp.maximum(c["stateless_cap"], 1.0))
+
+    # availability: AO shortfall bites from the eviction, overdue RL after
+    # the RTO expires, broken criticals (propagation verdict) while their
+    # dark dependencies stay dark, QoS stress while the model runs hot
+    crit = jnp.maximum(c["ao"] + c["am"], 1.0)
+    rl_down = c["rl"] - rl_live
+    tm_down = c["tm"] - tm_live
+    ao_pen = jnp.where(evicted, 0.5 * s["ao_short"] / crit, 0.0)
+    overdue = jnp.where(t > c["rl_rto_s"] + EPS_T, 1.0, 0.0)
+    rl_pen = 0.1 * rl_down / jnp.maximum(c["rl"], 1.0) * overdue
+    dark_tot = jnp.maximum(
+        s["rl_need"] + p["evict_fraction"] * c["tm"], 1e-9)
+    dark_frac = (rl_down + tm_down) / dark_tot
+    dep_pen = 0.5 * p["dep_broken_frac"] * dark_frac
+    util_pen = jnp.where(util_model > QOS_EVICT_UTILIZATION, 1e-4, 0.0)
+    availability = jnp.clip(
+        BASE_AVAILABILITY - ao_pen - rl_pen - dep_pen - util_pen, 0.0, 1.0)
+
+    # per-tier live cores: class live-fraction applied to the tier x class
+    # core composition
+    class_live = jnp.stack([ao_live, c["am"], rl_live, tm_live])
+    class_total = jnp.stack([c["ao"], c["am"], c["rl"], c["tm"]])
+    frac = class_live / jnp.maximum(class_total, 1e-9)
+    tier_live = (c["tier_class"] * frac[None, :]).sum(axis=1)
+
+    return {"steady_used": steady_used, "overcommit_used": overcommit_used,
+            "burst_capacity": burst_capacity, "burst_online": burst_online,
+            "burst_used": burst_used, "cloud_used": cloud_prov,
+            "ao_live": ao_live, "am_live": c["am"] + 0.0 * t,
+            "rl_live": rl_live, "tm_live": tm_live,
+            "am_steady": am_steady, "am_bursted": am_bursted,
+            "rl_bursted": rl_bursted, "rl_not_bursted": rl_not_bursted,
+            "rl_t_steady": rl_t_steady, "terminated": terminated,
+            "utilization": utilization, "util_model": util_model,
+            "availability": availability, "tier_live": tier_live}
+
+
+def _simulate(c: Dict, p: Dict, ts: jnp.ndarray) -> Tuple[Dict, Dict]:
+    """One scenario: scan the step function over ``ts``; returns
+    (per-step traces, per-scenario summary/verdicts)."""
+    s = _schedule(c, p)
+    tier_total = jnp.maximum(c["tier_class"].sum(axis=1), 1e-9)
+
+    def body(carry, t):
+        out = _instant(c, p, s, t)
+        dt = jnp.maximum(t - carry["prev_t"], 0.0)
+        frac = out["tier_live"] / tier_total
+        below = frac < RESTORE_THRESH
+        below_seen = carry["below_seen"] | below
+        restore_t = jnp.where(
+            below_seen & ~below & jnp.isinf(carry["restore_t"]),
+            t, carry["restore_t"])
+        new = {
+            "prev_t": t,
+            "avail_int": carry["avail_int"] + out["availability"] * dt,
+            "avail_min": jnp.minimum(carry["avail_min"],
+                                     out["availability"]),
+            "util_peak": jnp.maximum(carry["util_peak"],
+                                     out["util_model"]),
+            "cloud_peak": jnp.maximum(carry["cloud_peak"],
+                                      out["cloud_used"]),
+            "below_seen": below_seen, "restore_t": restore_t,
+        }
+        return new, out
+
+    f32 = jnp.float32
+    carry0 = {
+        "prev_t": ts[0],
+        "avail_int": jnp.asarray(0.0, f32),
+        "avail_min": jnp.asarray(1.0, f32),
+        "util_peak": jnp.asarray(0.0, f32),
+        "cloud_peak": jnp.asarray(0.0, f32),
+        "below_seen": jnp.zeros(N_TIERS, bool),
+        "restore_t": jnp.full(N_TIERS, jnp.inf, f32),
+    }
+    carry, traces = jax.lax.scan(body, carry0, ts)
+
+    span = jnp.maximum(ts[-1] - ts[0], 1e-9)
+    availability_mean = carry["avail_int"] / span
+    time_to_restore = jnp.where(carry["below_seen"], carry["restore_t"], 0.0)
+    oc_cap_s = c["stateless_cap"] * (p["overcommit_factor"] - 1.0)
+    preempt_resident = (c["rl"] + c["tm"]) * (1.0 - p["evict_fraction"])
+    preempt_fit = preempt_resident <= oc_cap_s + 1e-6
+    dep_ok = p["dep_broken_frac"] <= 0.0
+    avail_ok = availability_mean >= BASE_AVAILABILITY - AVAIL_SLA_TOL
+    # the SLA verdict scores the post-migration steady point (stranded AM
+    # only), like the analytic model: the pre-migration transient — 2x
+    # traffic on Active-Migrate before burst absorbs it — stays visible in
+    # the trace and in util_peak, but is not an SLA breach by itself
+    am_stranded = c["am"] - s["am_in_burst"]
+    busy_post = (c["ao"] * _DEMAND_CRIT * p["traffic_mult"]
+                 + am_stranded * _DEMAND_CRIT * p["traffic_mult"]
+                 + preempt_resident * _DEMAND_PRE)
+    util_post = jnp.minimum(
+        1.0, busy_post / jnp.maximum(c["stateless_cap"], 1.0))
+    util_ok = util_post <= QOS_EVICT_UTILIZATION
+    rl_rto_met = s["rl_done_t"] <= c["rl_rto_s"] + EPS_T
+    sla_ok = (s["ao_ok"] & rl_rto_met & preempt_fit & dep_ok & avail_ok
+              & util_ok & (s["am_done_t"] <= 30.0 * 60.0)
+              & (s["burst_full_t"] <= 20.0 * 60.0))
+    summary = {
+        "burst_full_s": s["burst_full_t"], "am_done_s": s["am_done_t"],
+        "rl_done_s": s["rl_done_t"], "rl_rto_met": rl_rto_met,
+        "ao_ok": s["ao_ok"], "ao_short_cores": s["ao_short"],
+        "rl_shortfall_cores": s["rl_shortfall"],
+        "cloud_grant_cores": s["total_cloud"],
+        "cloud_arrival_s": s["cloud_arrival_t"],
+        "peak_cloud_cores": carry["cloud_peak"],
+        "availability_mean": availability_mean,
+        "availability_min": carry["avail_min"],
+        "util_peak": carry["util_peak"], "util_post": util_post,
+        "time_to_restore_s": time_to_restore,
+        "preempt_fit": preempt_fit, "dep_ok": dep_ok,
+        "avail_ok": avail_ok, "util_ok": util_ok, "sla_ok": sla_ok,
+    }
+    return traces, summary
+
+
+_simulate_jit = jax.jit(_simulate)
+# vmap over the scenario axis only: consts and the time grid are shared
+_sweep_jit = jax.jit(jax.vmap(_simulate, in_axes=(None, 0, None)))
+
+
+def _as_params(p: Dict[str, float]) -> Dict[str, jnp.ndarray]:
+    return {k: jnp.asarray(p[k], jnp.float32) for k in PARAM_KEYS}
+
+
+def simulate_timeline(cfg: TimelineConfig,
+                      params: Optional[Dict[str, float]] = None,
+                      ts: Optional[np.ndarray] = None
+                      ) -> Dict[str, np.ndarray]:
+    """Run ONE scenario timeline; returns ``{"t": ts, traces..., summary
+    scalars...}`` as numpy.  ``ts`` may be any increasing grid — pass the
+    orchestrator's snapshot times to compare against its ``Timeline``."""
+    base = default_scenario(burst_delay_s=cfg.preheat_s)
+    params = dict(base, **(params or {}))
+    ts = default_ts() if ts is None else np.asarray(ts, np.float64)
+    traces, summary = _simulate_jit(cfg.as_consts(), _as_params(params),
+                                    jnp.asarray(ts, jnp.float32))
+    out = {"t": ts}
+    out.update({k: np.asarray(v) for k, v in traces.items()})
+    out.update({k: np.asarray(v) for k, v in summary.items()})
+    return out
+
+
+def sweep_timeline(cfg: TimelineConfig,
+                   grid: Optional[Dict[str, np.ndarray]] = None,
+                   ts: Optional[np.ndarray] = None,
+                   dep_broken_frac: Optional[np.ndarray] = None,
+                   return_traces: bool = False) -> Dict[str, np.ndarray]:
+    """Temporal verdicts for every scenario in the grid, in one vmapped
+    scan: per-scenario time-to-restore per tier, availability integral vs
+    99.97%, peak on-demand cloud draw, and the SLA verdict — plus the full
+    per-step traces when ``return_traces``.
+
+    ``grid`` defaults to ``scenarios.scenario_grid()`` (the same axes the
+    analytic sweep uses); ``dep_broken_frac`` folds the dependency-graph
+    propagation verdicts into the availability trace (see
+    ``scenarios.sweep_with_dependency_ensemble``)."""
+    from repro.core.scenarios import scenario_grid
+    grid = scenario_grid() if grid is None else grid
+    n = len(next(iter(grid.values())))
+    params = {k: jnp.asarray(np.asarray(grid[k]), jnp.float32)
+              for k in PARAM_KEYS if k in grid}
+    if dep_broken_frac is None:
+        dep_broken_frac = grid.get("dep_broken_frac", np.zeros(n))
+    params["dep_broken_frac"] = jnp.asarray(
+        np.asarray(dep_broken_frac), jnp.float32)
+    defaults = default_scenario(burst_delay_s=cfg.preheat_s)
+    for k in PARAM_KEYS:                       # missing axes -> defaults
+        if k not in params:
+            params[k] = jnp.full(n, defaults[k], jnp.float32)
+    ts = default_ts() if ts is None else np.asarray(ts, np.float64)
+    traces, summary = _sweep_jit(cfg.as_consts(), params,
+                                 jnp.asarray(ts, jnp.float32))
+    out = {k: np.asarray(v) for k, v in summary.items()}
+    if return_traces:
+        out["t"] = ts
+        out.update({f"trace_{k}": np.asarray(v) for k, v in traces.items()})
+    return out
+
+
+def summarize_timeline_sweep(result: Dict[str, np.ndarray]
+                             ) -> Dict[str, object]:
+    """Ensemble-level digest of a ``sweep_timeline`` result."""
+    n = len(result["sla_ok"])
+    finite_rl = result["rl_done_s"][np.isfinite(result["rl_done_s"])]
+    return {
+        "n_scenarios": n,
+        "n_sla_ok": int(result["sla_ok"].sum()),
+        "n_rl_rto_met": int(result["rl_rto_met"].sum()),
+        "availability_mean_min": float(result["availability_mean"].min()),
+        "availability_floor": float(result["availability_min"].min()),
+        "worst_finite_rl_done_min": (float(finite_rl.max() / 60.0)
+                                     if len(finite_rl) else float("nan")),
+        "n_rl_never_restored": int(np.isinf(result["rl_done_s"]).sum()),
+        "peak_cloud_cores_max": float(result["peak_cloud_cores"].max()),
+        "worst_util_peak": float(result["util_peak"].max()),
+    }

@@ -40,6 +40,10 @@ class CallGraph:
     critical: np.ndarray        # bool — survives failover (AO/AM)
     preemptible: np.ndarray     # bool — goes dark in a failover (RL/TM)
     names: List[str]
+    # CSR position -> index in the edge arrays the builder consumed
+    # (e.g. ``FleetState.edges`` order); lets plan/detection results be
+    # mapped back without re-deriving the sort
+    input_order: Optional[np.ndarray] = None
 
     # ------------------------------------------------------------------
     @property
@@ -62,6 +66,15 @@ class CallGraph:
     def edge_names(self, edge_idx: Iterable[int]) -> List[Tuple[str, str]]:
         return [(self.names[self.src[i]], self.names[self.dst[i]])
                 for i in edge_idx]
+
+    def input_edge_indices(self, edge_idx: Iterable[int]) -> np.ndarray:
+        """Map CSR edge indices (e.g. ``HardeningPlan.hardened_edges``)
+        back to the builder's input edge order — for ``from_fleet_state``
+        graphs, positions into ``FleetState.edges`` suitable for
+        ``fs.edges.fail_open[...] = True``."""
+        assert self.input_order is not None, \
+            "graph was built without an input-order mapping"
+        return self.input_order[np.asarray(list(edge_idx), np.int64)]
 
     def unsafe_edge_keys(self) -> Set[Tuple[str, str]]:
         """(caller, callee) name pairs of every fail-close edge."""
@@ -164,4 +177,4 @@ def _build_csr(n: int, src: np.ndarray, dst: np.ndarray,
                      indptr=indptr,
                      critical=np.asarray(critical, bool),
                      preemptible=np.asarray(preemptible, bool),
-                     names=list(names))
+                     names=list(names), input_order=order)

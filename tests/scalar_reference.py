@@ -437,3 +437,228 @@ def scalar_runtime_analysis(fleet: Dict[str, ServiceSpec],
         "precision": len(tp) / max(1, len(found)),
         "recall": len(tp) / max(1, len(truth)),
     }
+
+
+# ---------------------------------------------------------------------------
+# Scalar timeline-stepper reference (for the array-native discrete-time
+# failover simulator in ``repro.core.timeline_sim``): a plain Python loop
+# over the time grid with if/else control flow — no arrays, no closed-form
+# vectorized tricks — implementing the same documented semantics.  The
+# equivalence tests pin the ``lax.scan`` kernel's traces to this stepper
+# (float32-tight tolerances; env counts, event times and verdicts exact).
+# ---------------------------------------------------------------------------
+
+import math
+
+
+def scalar_timeline(cfg, params=None, ts=None):
+    """Reference for ``timeline_sim.simulate_timeline``: same
+    ``TimelineConfig`` / scenario-params / time-grid inputs, same output
+    keys, scalar Python arithmetic throughout."""
+    from repro.core.timeline_sim import (AVAIL_SLA_TOL, BASE_AVAILABILITY,
+                                         EPS_T, N_TIERS, RESTORE_THRESH,
+                                         default_scenario, default_ts)
+    from repro.core.tiers import QOS_EVICT_UTILIZATION
+
+    p = dict(default_scenario(burst_delay_s=cfg.preheat_s),
+             **(params or {}))
+    if ts is None:
+        ts = default_ts()
+    ts = [float(t) for t in ts]
+
+    ao, am, rl, tm = (cfg.ao_cores, cfg.am_cores, cfg.rl_cores,
+                      cfg.tm_cores)
+    mult = p["traffic_mult"]
+    evict = p["evict_fraction"]
+
+    # ---- schedule (mirrors the spec in timeline_sim, scalar math) ----
+    burst_cap = cfg.burst_cap_full * p["burst_availability"]
+    ramp_total = burst_cap / max(cfg.spawn_rate, 1e-9)
+    tick_s = ramp_total / 10.0
+    burst_full_t = p["burst_delay_s"] + ramp_total
+
+    n_am_waves = math.ceil(cfg.am_envs / cfg.mbb_parallelism)
+    am_done_t = burst_full_t + n_am_waves * cfg.mbb_wave_s
+    am_in_burst = min(am, burst_cap)
+
+    ao_need = ao * (mult - 1.0)
+    am_release_frac = cfg.am_stateless_cores / max(am, 1e-9)
+    am_released = am_in_burst * am_release_frac
+    free_at_am_done = cfg.stateless_cap - (
+        cfg.steady_used0 - evict * cfg.sl_preempt_cores - am_released)
+    ao_ok = ao_need <= free_at_am_done + 1e-6
+    ao_short = max(0.0, ao_need - free_at_am_done)
+
+    rl_need = rl * evict
+    rl_envs_evicted = cfg.rl_envs * evict
+    n_rl_waves = max(1, math.ceil(rl_envs_evicted / cfg.mbb_parallelism))
+    rl_last_wave_t = burst_full_t + n_rl_waves * cfg.rl_wave_s
+    burst_free_rl = max(0.0, burst_cap - am_in_burst)
+    quota_eff = cfg.cloud_quota * p["cloud_quota_frac"]
+    total_cloud = min(max(0.0, rl_need - burst_free_rl), quota_eff)
+    per_wave = rl_need / n_rl_waves
+    k_star = min(math.floor(burst_free_rl / max(per_wave, 1e-9)) + 1,
+                 n_rl_waves)
+    cloud_start_t = burst_full_t + k_star * cfg.rl_wave_s
+    cloud_arrival_t = cloud_start_t + total_cloud / max(cfg.cloud_rate,
+                                                        1e-9)
+    rl_shortfall = max(0.0, rl_need - burst_free_rl - quota_eff)
+    if rl_shortfall > 1e-6:
+        rl_done_t = float("inf")
+    else:
+        rl_done_t = rl_last_wave_t
+        if total_cloud > 1e-6:
+            rl_done_t = max(rl_done_t, cloud_arrival_t)
+
+    tier_class = cfg.tier_class_cores
+    tier_total = [max(sum(tier_class[t]), 1e-9) for t in range(N_TIERS)]
+
+    series = {k: [] for k in (
+        "steady_used", "overcommit_used", "burst_capacity", "burst_online",
+        "burst_used", "cloud_used", "ao_live", "am_live", "rl_live",
+        "tm_live", "am_steady", "am_bursted", "rl_bursted",
+        "rl_not_bursted", "rl_t_steady", "terminated", "utilization",
+        "util_model", "availability")}
+    tier_live_rows = []
+    avail_int, avail_min = 0.0, 1.0
+    util_peak, cloud_peak = 0.0, 0.0
+    below_seen = [False] * N_TIERS
+    restore_t = [float("inf")] * N_TIERS
+    prev_t = ts[0]
+
+    for t in ts:
+        evicted = t >= cfg.kill_s - EPS_T
+        e = evict if evicted else 0.0
+
+        ticks = math.floor((t - p["burst_delay_s"] + EPS_T)
+                           / max(tick_s, 1e-9))
+        ticks = min(10, max(0, ticks))
+        burst_online = burst_cap * ticks / 10.0
+        burst_capacity = burst_cap if t >= p["burst_delay_s"] - EPS_T \
+            else 0.0
+
+        waves = math.floor((t - burst_full_t + EPS_T) / cfg.mbb_wave_s)
+        waves = min(n_am_waves, max(0, waves))
+        am_envs_moved = min(cfg.am_envs, cfg.mbb_parallelism * waves)
+        am_moved = min(am * am_envs_moved / max(cfg.am_envs, 1.0),
+                       burst_cap)
+
+        ao_scaled = ao_ok and t >= am_done_t - EPS_T
+        ao_live = ao * (mult if ao_scaled else 1.0)
+        ao_extra = ao_need if ao_scaled else 0.0
+
+        rl_waves = math.floor((t - burst_full_t + EPS_T) / cfg.rl_wave_s)
+        rl_waves = min(n_rl_waves, max(0, rl_waves))
+        processed = rl_need * rl_waves / n_rl_waves
+        rl_burst = min(processed, burst_free_rl)
+        cloud_prov = min(processed - rl_burst, quota_eff)
+        cloud_live = total_cloud if t >= cloud_arrival_t - EPS_T else 0.0
+        cloud_live = min(cloud_live, cloud_prov)
+        rl_restored = rl_burst + cloud_live
+        rl_live = rl - e * rl + rl_restored
+        tm_live = tm * (1.0 - e)
+
+        steady_used = (cfg.steady_used0 - e * cfg.sl_preempt_cores
+                       - am_moved * am_release_frac + ao_extra)
+        overcommit_used = cfg.overcommit_used0 - e * cfg.oc_preempt_cores
+        burst_used = am_moved + rl_burst
+
+        am_bursted = am_envs_moved
+        rl_bursted = round(rl_envs_evicted * rl_restored
+                           / max(rl_need, 1e-9))
+        rl_not_bursted = round(e * cfg.rl_envs) - rl_bursted
+        rl_t_steady = round((1.0 - e) * (cfg.rl_envs + cfg.tm_envs))
+        terminated = round(e * cfg.tm_envs)
+
+        am_steady_cores = am - am_moved
+        pre_steady = (rl + tm) * (1.0 - e)
+        busy = (ao_live * 0.62 * mult + am_steady_cores * 0.62 * mult
+                + pre_steady * 0.35)
+        utilization = min(1.0, busy / max(cfg.phys_cores, 1.0))
+        busy_model = (ao * 0.62 * mult + am_steady_cores * 0.62 * mult
+                      + pre_steady * 0.35)
+        util_model = min(1.0, busy_model / max(cfg.stateless_cap, 1.0))
+
+        crit = max(ao + am, 1.0)
+        rl_down = rl - rl_live
+        tm_down = tm - tm_live
+        ao_pen = 0.5 * ao_short / crit if evicted else 0.0
+        rl_pen = (0.1 * rl_down / max(rl, 1.0)
+                  if t > cfg.rl_rto_s + EPS_T else 0.0)
+        dark_tot = max(rl_need + evict * tm, 1e-9)
+        dep_pen = 0.5 * p["dep_broken_frac"] * (rl_down + tm_down) / dark_tot
+        util_pen = 1e-4 if util_model > QOS_EVICT_UTILIZATION else 0.0
+        availability = min(1.0, max(
+            0.0, BASE_AVAILABILITY - ao_pen - rl_pen - dep_pen - util_pen))
+
+        class_live = [ao_live, am, rl_live, tm_live]
+        class_total = [ao, am, rl, tm]
+        frac = [class_live[c] / max(class_total[c], 1e-9) for c in range(4)]
+        tier_live = [sum(tier_class[ti][c] * frac[c] for c in range(4))
+                     for ti in range(N_TIERS)]
+
+        for k, v in (("steady_used", steady_used),
+                     ("overcommit_used", overcommit_used),
+                     ("burst_capacity", burst_capacity),
+                     ("burst_online", burst_online),
+                     ("burst_used", burst_used), ("cloud_used", cloud_prov),
+                     ("ao_live", ao_live), ("am_live", am),
+                     ("rl_live", rl_live), ("tm_live", tm_live),
+                     ("am_steady", cfg.am_envs - am_bursted),
+                     ("am_bursted", am_bursted), ("rl_bursted", rl_bursted),
+                     ("rl_not_bursted", rl_not_bursted),
+                     ("rl_t_steady", rl_t_steady),
+                     ("terminated", terminated),
+                     ("utilization", utilization),
+                     ("util_model", util_model),
+                     ("availability", availability)):
+            series[k].append(v)
+        tier_live_rows.append(tier_live)
+
+        avail_int += availability * max(0.0, t - prev_t)
+        avail_min = min(avail_min, availability)
+        util_peak = max(util_peak, util_model)
+        cloud_peak = max(cloud_peak, cloud_prov)
+        for ti in range(N_TIERS):
+            below = tier_live[ti] / tier_total[ti] < RESTORE_THRESH
+            if below:
+                below_seen[ti] = True
+            elif below_seen[ti] and math.isinf(restore_t[ti]):
+                restore_t[ti] = t
+        prev_t = t
+
+    span = max(ts[-1] - ts[0], 1e-9)
+    availability_mean = avail_int / span
+    oc_cap_s = cfg.stateless_cap * (p["overcommit_factor"] - 1.0)
+    preempt_resident = (rl + tm) * (1.0 - evict)
+    preempt_fit = preempt_resident <= oc_cap_s + 1e-6
+    dep_ok = p["dep_broken_frac"] <= 0.0
+    avail_ok = availability_mean >= BASE_AVAILABILITY - AVAIL_SLA_TOL
+    # verdict utilization: post-migration steady point (stranded AM only)
+    am_stranded = am - am_in_burst
+    busy_post = (ao * 0.62 * mult + am_stranded * 0.62 * mult
+                 + preempt_resident * 0.35)
+    util_post = min(1.0, busy_post / max(cfg.stateless_cap, 1.0))
+    util_ok = util_post <= QOS_EVICT_UTILIZATION
+    rl_rto_met = rl_done_t <= cfg.rl_rto_s + EPS_T
+    sla_ok = (ao_ok and rl_rto_met and preempt_fit and dep_ok and avail_ok
+              and util_ok and am_done_t <= 30.0 * 60.0
+              and burst_full_t <= 20.0 * 60.0)
+    out = {"t": ts}
+    out.update(series)
+    out["tier_live"] = tier_live_rows
+    out.update({
+        "burst_full_s": burst_full_t, "am_done_s": am_done_t,
+        "rl_done_s": rl_done_t, "rl_rto_met": rl_rto_met,
+        "ao_ok": ao_ok, "ao_short_cores": ao_short,
+        "rl_shortfall_cores": rl_shortfall,
+        "cloud_grant_cores": total_cloud,
+        "cloud_arrival_s": cloud_arrival_t, "peak_cloud_cores": cloud_peak,
+        "availability_mean": availability_mean, "availability_min": avail_min,
+        "util_peak": util_peak, "util_post": util_post,
+        "time_to_restore_s": [restore_t[ti] if below_seen[ti] else 0.0
+                              for ti in range(N_TIERS)],
+        "preempt_fit": preempt_fit, "dep_ok": dep_ok, "avail_ok": avail_ok,
+        "util_ok": util_ok, "sla_ok": sla_ok,
+    })
+    return out

@@ -1,0 +1,181 @@
+"""QoS-sweep edge cases (eviction.py) and multi-hop drill paths
+(drills.py) the main suites don't touch."""
+
+import numpy as np
+import pytest
+
+from repro.core.drills import (certify_fleet_state,
+                               dependency_safety_certification, remediate)
+from repro.core.eviction import (Host, HostArrays, HostPod, QoSController,
+                                 make_host_arrays)
+from repro.core.fleet_state import FleetState
+from repro.core.service import ServiceSpec
+from repro.core.tiers import (QOS_COOL_UTILIZATION, QOS_EVICT_UTILIZATION,
+                              FailureClass, Tier)
+
+
+# ---------------------------------------------------------------------------
+# QoS controller edge cases
+# ---------------------------------------------------------------------------
+
+
+def _host_arrays(pod_cores, pod_util, pod_pre, n_hosts=1, cores=100.0,
+                 pod_host=None):
+    n = len(pod_cores)
+    return HostArrays(
+        host_cores=np.full(n_hosts, cores),
+        pod_host=(np.zeros(n, np.int32) if pod_host is None
+                  else np.asarray(pod_host, np.int32)),
+        pod_cores=np.asarray(pod_cores, float),
+        pod_util=np.asarray(pod_util, float),
+        pod_pre=np.asarray(pod_pre, bool),
+        alive=np.ones(n, bool))
+
+
+def test_qos_sweep_zero_preemptible_pods_evicts_nothing():
+    """An all-critical hot host has no eviction candidates: the sweep
+    must not touch it (zero Restore-Later/Terminate pods)."""
+    ha = _host_arrays(pod_cores=[40, 40, 20], pod_util=[0.9, 0.9, 0.8],
+                      pod_pre=[False, False, False])
+    assert ha.utilization()[0] > QOS_EVICT_UTILIZATION
+    ctl = QoSController(ha)
+    assert ctl.sweep(now=0.0) == 0
+    assert ha.alive.all()
+    assert ctl.evictions == []
+
+
+def test_qos_sweep_single_host_cools_below_target():
+    """HostArrays with one host: the busiest preemptible pods go first
+    and eviction stops once the host cools below the 70% target."""
+    ha = _host_arrays(pod_cores=[30, 20, 20, 20, 10],
+                      pod_util=[1.0, 1.0, 1.0, 0.9, 0.5],
+                      pod_pre=[False, True, True, True, True])
+    before = ha.utilization()[0]
+    assert before > QOS_EVICT_UTILIZATION
+    ctl = QoSController(ha)
+    n = ctl.sweep(now=1.0)
+    assert n > 0
+    after = ha.utilization()[0]
+    assert after <= QOS_COOL_UTILIZATION + 1e-9
+    # critical pod untouched; evicted pods are the busiest preemptibles
+    assert ha.alive[0]
+    dead = np.flatnonzero(~ha.alive)
+    busy = ha.pod_cores * ha.pod_util
+    alive_pre = ha.alive & ha.pod_pre
+    if alive_pre.any() and len(dead):
+        assert busy[dead].min() >= busy[alive_pre].max() - 1e-9
+    # a second sweep on the cooled host is a no-op
+    assert ctl.sweep(now=2.0) == 0
+
+
+def test_qos_sweep_cool_host_untouched_and_empty_population():
+    ha = _host_arrays(pod_cores=[20, 10], pod_util=[0.5, 0.4],
+                      pod_pre=[True, True])
+    assert ha.utilization()[0] < QOS_EVICT_UTILIZATION
+    assert QoSController(ha).sweep(now=0.0) == 0
+    # empty Host-list population
+    assert QoSController([]).sweep(now=0.0) == 0
+    # Host-list population where every host is cool
+    hosts = [Host(hid=0, pods=[HostPod("a", 10.0, True, 0.3)])]
+    assert QoSController(hosts).sweep(now=0.0) == 0
+
+
+def test_qos_sweep_object_and_array_paths_agree():
+    """The Host-list path and the HostArrays path select the same number
+    of victims on an identical two-host population (one hot, one cool)."""
+    pods = [  # (host, cores, util, preemptible)
+        (0, 30.0, 1.0, False), (0, 25.0, 1.0, True), (0, 20.0, 1.0, True),
+        (0, 15.0, 0.8, True), (1, 20.0, 0.5, True), (1, 10.0, 0.4, False)]
+    hosts = [Host(hid=0), Host(hid=1)]
+    for i, (h, c, u, p) in enumerate(pods):
+        hosts[h].pods.append(HostPod(f"p{i}", c, p, u))
+    ha = _host_arrays(pod_cores=[c for _, c, _, _ in pods],
+                      pod_util=[u for _, _, u, _ in pods],
+                      pod_pre=[p for _, _, _, p in pods],
+                      n_hosts=2, pod_host=[h for h, _, _, _ in pods])
+    n_obj = QoSController(hosts).sweep(now=0.0)
+    n_arr = QoSController(ha).sweep(now=0.0)
+    assert n_obj == n_arr > 0
+    assert sum(len(h.pods) for h in hosts) == int(ha.alive.sum())
+
+
+def test_make_host_arrays_one_host():
+    ha = make_host_arrays(n_hosts=1, seed=3)
+    assert ha.n_hosts == 1
+    assert (ha.pod_host == 0).all()
+    assert ha.n_pods > 0
+    QoSController(ha).sweep(now=0.0)      # must not raise on 1-host shape
+
+
+# ---------------------------------------------------------------------------
+# drills.py multi-hop paths
+# ---------------------------------------------------------------------------
+
+
+def _chain_fleet():
+    """a(T1,AO) -closed-> b(T2,AM) -closed-> c(T3,RL): `a` has NO direct
+    preemptible dependency — it can only break through the relay chain.
+    `d` is a critical caller with a fail-open dep (stays certified)."""
+    c = ServiceSpec("c", Tier.T3, FailureClass.RESTORE_LATER, 1.0, 4)
+    b = ServiceSpec("b", Tier.T2, FailureClass.ACTIVE_MIGRATE, 1.0, 4,
+                    deps=["c"], fail_open={"c": False})
+    a = ServiceSpec("a", Tier.T1, FailureClass.ALWAYS_ON, 1.0, 4,
+                    deps=["b"], fail_open={"b": False})
+    d = ServiceSpec("d", Tier.T1, FailureClass.ALWAYS_ON, 1.0, 4,
+                    deps=["c"], fail_open={"c": True})
+    return {"a": a, "b": b, "c": c, "d": d}
+
+
+def test_blackhole_drill_flags_multi_hop_chain():
+    fleet = _chain_fleet()
+    res = dependency_safety_certification(fleet, seed=0)
+    assert not res["b"].certified          # direct unsafe dep on dark c
+    assert not res["a"].certified          # multi-hop: only via b
+    assert res["d"].certified              # fail-open degrades gracefully
+    # a's failing dep is the *critical* relay b, not a preemptible
+    assert res["a"].failing_deps == ["b"]
+    assert res["b"].failing_deps == ["c"]
+
+
+def test_certify_fleet_state_counts_multi_hop():
+    fs = FleetState.from_specs(_chain_fleet(), with_edges=True)
+    cert = certify_fleet_state(fs, seed=0)
+    assert cert["n_critical"] == 3                  # a, b, d
+    assert cert["n_flagged"] == 2                   # a and b
+    assert cert["n_multi_hop"] == 1                 # a: relay-only breakage
+    assert cert["propagation_rounds"] >= 2          # two hops to fixpoint
+    assert cert["unsafe_edges"] == 1                # only b->c is inverted
+
+
+def test_remediating_relay_edge_certifies_transitively():
+    """Hardening the single critical->preemptible edge (b->c) un-breaks
+    the whole chain — a recovers without touching a->b."""
+    fleet = _chain_fleet()
+    n = remediate(fleet, {("b", "c")})
+    assert n == 1
+    res = dependency_safety_certification(fleet, seed=0)
+    assert all(r.certified for r in res.values())
+    fs = FleetState.from_specs(fleet, with_edges=True)
+    cert = certify_fleet_state(fs, seed=0)
+    assert cert["n_flagged"] == 0 and cert["n_multi_hop"] == 0
+
+
+def test_certify_fleet_state_requires_edges():
+    fs = FleetState.from_specs(_chain_fleet(), with_edges=False)
+    with pytest.raises(AssertionError):
+        certify_fleet_state(fs)
+
+
+def test_drill_all_critical_fleet_trivially_certifies():
+    """Zero Restore-Later services: nothing can go dark, every critical
+    service certifies."""
+    fleet = {
+        "x": ServiceSpec("x", Tier.T0, FailureClass.ALWAYS_ON, 1.0, 4,
+                         deps=["y"], fail_open={"y": False}),
+        "y": ServiceSpec("y", Tier.T2, FailureClass.ACTIVE_MIGRATE, 1.0, 4),
+    }
+    res = dependency_safety_certification(fleet, seed=0)
+    assert all(r.certified for r in res.values())
+    cert = certify_fleet_state(FleetState.from_specs(fleet, with_edges=True))
+    assert cert["n_flagged"] == 0
+    assert cert["unsafe_edges"] == 0      # x->y is critical->critical
