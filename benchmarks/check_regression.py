@@ -9,8 +9,11 @@ guard naturally compares against the previous PR's committed snapshot.
 
 Rows are matched by name.  Sub-``--min-us`` fresh rows are ignored (they
 are dispatch-overhead noise, not regressions), as are rows that exist on
-only one side (new/retired benchmarks).  A fresh row that *errored*
-(``us_per_call`` null) always fails.
+only one side (new/retired benchmarks) and ``*_cold`` rows (first-call
+compile time — tracked in the JSON for the trajectory, but XLA compile
+latency is too machine/cache-sensitive to gate on; ``--include-cold``
+restores them).  A fresh row that *errored* (``us_per_call`` null)
+always fails.
 
 Caveat: the committed baseline was produced on the author's machine, so
 the ratio folds in machine-speed differences, not just code changes — the
@@ -61,6 +64,8 @@ def main() -> int:
                     help="fail on fresh > factor * baseline (default 2x)")
     ap.add_argument("--min-us", type=float, default=5_000.0,
                     help="ignore fresh rows faster than this (noise floor)")
+    ap.add_argument("--include-cold", action="store_true",
+                    help="also gate *_cold (compile-time) rows")
     args = ap.parse_args()
 
     baseline = args.baseline or pick_baseline(args.fresh.resolve().parent,
@@ -77,6 +82,8 @@ def main() -> int:
         if us is None or base is None or base <= 0:
             continue
         if us < args.min_us:
+            continue
+        if name.endswith("_cold") and not args.include_cold:
             continue
         ratio = us / base
         marker = " <-- REGRESSION" if ratio > args.factor else ""

@@ -1,15 +1,24 @@
 """Temporal scenario ensemble: execute failure *timelines*, not point
 estimates.
 
-Synthesizes a Tables-1-3 fleet, then runs the discrete-time failover
-kernel (``repro.core.timeline_sim``) vmapped over the 256-scenario grid
-with the dependency-graph propagation verdicts folded into the
-availability trace — per-scenario time-to-restore per tier, the
+Synthesizes a Tables-1-3 fleet, then runs the fused sweep engine
+(``repro.core.sweep_engine``: analytic model + the discrete-time failover
+kernel + dependency propagation in one jitted, device-parallel pipeline)
+over the scenario grid — per-scenario time-to-restore per tier, the
 availability integral against the 99.97% SLA, and the peak on-demand
 cloud draw, alongside the analytic closed-form verdicts.
 
   PYTHONPATH=src python examples/temporal_sweep.py
+  # 64k-scenario ensemble, sharded over 8 virtual host devices:
+  PYTHONPATH=src python examples/temporal_sweep.py --grid-size 65536 \\
+      --devices 8
 """
+
+import argparse
+import os
+import subprocess
+import sys
+import time
 
 import numpy as np
 
@@ -17,18 +26,38 @@ from repro.core.scenarios import (operating_point_mask, scenario_grid,
                                   summarize_sweep,
                                   sweep_with_dependency_ensemble)
 from repro.core.service import synthesize_fleet
+from repro.core.sweep_engine import tile_grid
 from repro.core.tiers import Tier
 from repro.graph import CallGraph, plan_hardening
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grid-size", type=int, default=256,
+                    help="scenario count (the 256-point base grid is "
+                         "tiled out; the fused engine bucket-pads)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="virtual host devices to shard the scenario "
+                         "axis over (re-executes under XLA_FLAGS)")
+    args = ap.parse_args()
+    if args.devices > 1 and "_TEMPORAL_SWEEP_CHILD" not in os.environ:
+        env = dict(os.environ, _TEMPORAL_SWEEP_CHILD="1")
+        env["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                            f" --xla_force_host_platform_device_count="
+                            f"{args.devices}").strip()
+        env.setdefault("PYTHONPATH", "src")
+        raise SystemExit(subprocess.run(
+            [sys.executable, *sys.argv], env=env).returncode)
+
     fs = synthesize_fleet(scale=0.1, seed=7, as_arrays=True,
                           unsafe_chain_fraction=0.02)
     fs.apply_ufa_target_classes()
+    import jax
     print(f"fleet: {fs.n} service-environments, "
-          f"{float(fs.spec_cores.sum()):,.0f} cores")
+          f"{float(fs.spec_cores.sum()):,.0f} cores | "
+          f"grid={args.grid_size} devices={len(jax.devices())}")
 
-    grid = scenario_grid()
+    grid = tile_grid(scenario_grid(), args.grid_size)
 
     # 1. the un-remediated fleet: fail-close chains break criticals in
     #    every blackhole scenario, sinking the availability trace
@@ -47,8 +76,13 @@ def main():
     print(f"hardened {plan.n_hardened} edges in {plan.rounds} rounds "
           f"(certified={plan.certified})")
 
-    # 3. the hardened fleet, same temporal ensemble
+    # 3. the hardened fleet, same temporal ensemble (fused engine path —
+    #    warm after step 1 compiled the bucket)
+    t0 = time.time()
     res = sweep_with_dependency_ensemble(fs, grid=grid, temporal=True)
+    dt = time.time() - t0
+    print(f"fused sweep: {len(res['sla_ok'])} scenarios in {dt:.2f}s "
+          f"({len(res['sla_ok'])/dt:,.0f} scenarios/s)")
     summary = summarize_sweep(res)
     print("\n== ensemble digest (analytic + temporal, hardened fleet) ==")
     for k, v in summary.items():

@@ -253,6 +253,24 @@ class Orchestrator:
         return extract_timeline_config(self)
 
     # ------------------------------------------------------------------
+    def sweep_engine(self, *, graph=None, seed: int = 0, ts=None,
+                     devices=None):
+        """Fused sweep engine over THIS orchestrator's steady state: the
+        analytic model, the timeline scan and (with ``graph``) the
+        dependency propagation composed in one jitted, device-parallel
+        pipeline (``repro.core.sweep_engine``).  Call in steady state —
+        it snapshots ``timeline_config()``; the returned engine then runs
+        arbitrary scenario grids (256 .. 100k+) without touching the
+        orchestrator again."""
+        from repro.core.scenarios import FleetAggregates
+        from repro.core.sweep_engine import SweepEngine
+        agg = (FleetAggregates.from_fleet_state(self.fs)
+               if hasattr(self.fs, "fclass")
+               else FleetAggregates.from_fleet(self.fs))
+        return SweepEngine(agg, self.timeline_config(), graph=graph,
+                           seed=seed, ts=ts, devices=devices)
+
+    # ------------------------------------------------------------------
     def class_cores(self, fc: FailureClass, placement: Optional[str] = None
                     ) -> float:
         return self.fs.class_cores(fc, placement)

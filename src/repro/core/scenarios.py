@@ -203,6 +203,24 @@ def _scenario_outcome(consts: Dict[str, jnp.ndarray], p: Dict[str, jnp.ndarray])
     }
 
 
+# public kernel entry point: the fused sweep engine vmaps this (one
+# scalar scenario) fused with the timeline scan and the dependency
+# penalty — same ops as the standalone sweep, hence bit-identical
+scenario_outcome = _scenario_outcome
+
+
+def analytic_consts(agg: FleetAggregates) -> Dict[str, jnp.ndarray]:
+    """f32 device constants for ``scenario_outcome`` (precomputed once,
+    passed as traced arguments so the jit cache is keyed on shapes, not
+    fleet values)."""
+    return {"ao": jnp.asarray(agg.ao_cores, jnp.float32),
+            "am": jnp.asarray(agg.am_cores, jnp.float32),
+            "rl": jnp.asarray(agg.rl_cores, jnp.float32),
+            "tm": jnp.asarray(agg.tm_cores, jnp.float32),
+            "am_envs": jnp.asarray(agg.am_envs, jnp.float32),
+            "rl_envs": jnp.asarray(agg.rl_envs, jnp.float32)}
+
+
 # compiled once per (grid-shape, consts-structure); reused across sweeps
 _sweep_jit = jax.jit(jax.vmap(_scenario_outcome, in_axes=(None, 0)))
 
@@ -228,12 +246,15 @@ def sweep_scenarios(agg: FleetAggregates,
     the default 2h/240-step grid."""
     grid = grid if grid is not None else scenario_grid()
     n = len(next(iter(grid.values())))
-    consts = {"ao": jnp.asarray(agg.ao_cores, jnp.float32),
-              "am": jnp.asarray(agg.am_cores, jnp.float32),
-              "rl": jnp.asarray(agg.rl_cores, jnp.float32),
-              "tm": jnp.asarray(agg.tm_cores, jnp.float32),
-              "am_envs": jnp.asarray(agg.am_envs, jnp.float32),
-              "rl_envs": jnp.asarray(agg.rl_envs, jnp.float32)}
+    if timeline is not None:
+        # one fused, sharded, jitted pipeline: analytic model + timeline
+        # scan in a single vmap (the t_-prefixed temporal verdicts come
+        # from the same compiled program, no host round-trip between
+        # stages) — see repro.core.sweep_engine
+        from repro.core.sweep_engine import SweepEngine
+        eng = SweepEngine(agg, timeline, ts=ts)
+        return eng.run(grid, dep_broken_frac=dep_broken_frac)
+    consts = analytic_consts(agg)
     params = {k: jnp.asarray(v, jnp.float32) for k, v in grid.items()}
     if dep_broken_frac is None:
         dep_broken_frac = np.zeros(n)
@@ -241,11 +262,6 @@ def sweep_scenarios(agg: FleetAggregates,
     out = _sweep_jit(consts, params)
     result = {k: np.asarray(v) for k, v in out.items()}
     result.update({k: np.asarray(v) for k, v in grid.items()})
-    if timeline is not None:
-        from repro.core.timeline_sim import sweep_timeline
-        tres = sweep_timeline(timeline, grid=grid, ts=ts,
-                              dep_broken_frac=np.asarray(dep_broken_frac))
-        result.update({f"t_{k}": v for k, v in tres.items()})
     return result
 
 
@@ -272,21 +288,29 @@ def sweep_with_dependency_ensemble(fs: FleetState,
     *trace*: a broken critical's penalty decays as its dark dependencies
     restore, and the ``t_``-prefixed temporal verdicts land next to the
     analytic ones."""
-    from repro.graph import CallGraph, blackhole_ensemble
+    from repro.graph import CallGraph
     grid = grid if grid is not None else scenario_grid()
     graph = CallGraph.from_fleet_state(fs)
-    ens = blackhole_ensemble(graph, seed=seed,
-                             fractions=np.asarray(grid["evict_fraction"]))
     agg = FleetAggregates.from_fleet_state(fs)
-    timeline = None
     if temporal:
+        # the fused engine: propagation + analytic model + timeline scan
+        # in ONE jitted, device-parallel pipeline (sweep_engine) — the
+        # per-scenario broken-critical verdicts never touch the host
+        # before the availability trace consumes them
+        from repro.core.sweep_engine import SweepEngine
         from repro.core.timeline_sim import config_for_fleet
         timeline = config_for_fleet(fs, region=region)
+        eng = SweepEngine(agg, timeline, graph=graph, seed=seed, ts=ts)
+        return eng.run(grid)
+    from repro.graph import blackhole_ensemble
+    ens = blackhole_ensemble(graph, seed=seed,
+                             fractions=np.asarray(grid["evict_fraction"]))
     result = sweep_scenarios(agg, grid,
-                             dep_broken_frac=ens["broken_critical_frac"],
-                             timeline=timeline, ts=ts)
-    result["dep_n_broken_critical"] = np.asarray(ens["n_broken_critical"])
-    result["dep_n_dark"] = np.asarray(ens["n_dark"])
+                             dep_broken_frac=ens["broken_critical_frac"])
+    # int32, matching the fused temporal path's device-computed counts
+    result["dep_n_broken_critical"] = np.asarray(ens["n_broken_critical"],
+                                                 np.int32)
+    result["dep_n_dark"] = np.asarray(ens["n_dark"], np.int32)
     return result
 
 

@@ -1,0 +1,317 @@
+"""Sharded fused sweep engine: full-peak scenario ensembles at 100k+.
+
+The paper certifies UFA against rare full-peak failovers by exploring the
+scenario space; PR 4's composition ran the analytic model
+(``scenarios._sweep_jit``), the timeline scan (``timeline_sim._sweep_jit``)
+and the dependency propagation (``graph.blackhole_ensemble``) as *separate*
+jitted calls with host round-trips between them, and materialized the full
+(S, T, series) trace stack even when only verdicts were wanted — which is
+why ensembles capped out around 256 scenarios.  This module fuses the
+three stages into ONE jitted, device-parallel pipeline:
+
+  * per scenario, ``scenarios.scenario_outcome`` (closed-form verdicts),
+    ``timeline_sim.timeline_verdicts`` (the ``lax.scan`` timeline kernel,
+    summary-only — no trace materialization) and the dependency-propagation
+    penalty are composed inside one ``vmap``;
+  * the blackhole propagation runs on device inside the same program:
+    unique ``evict_fraction`` dark sets (shared uniform draws, as in
+    ``blackhole_ensemble``) go through the ``lax.while_loop`` fixed point
+    once, and each scenario *gathers* its broken-critical fraction — the
+    (S, n) dark matrix and the per-scenario verdicts never touch the host
+    between stages;
+  * the scenario axis is bucket-padded and reshaped to ``(n_chunks,
+    chunk)`` mega-batches driven by ``lax.map`` — chunk widths and chunk
+    counts are padded to powers of two, so grids from 256 to 100k+
+    scenarios reuse a handful of compiled shapes (no recompile per size
+    within a padding bucket; see ``bucket_shape`` / ``compiled_variants``);
+  * the chunk axis is sharded across devices via ``repro.dist``
+    (``ctx.sharding_rules`` + a ``NamedSharding`` over a 1-D "scenarios"
+    mesh), and the scenario buffers are donated to the pipeline.
+
+Config (fleet aggregates, timeline constants, graph edges) is precomputed
+once into device-resident arrays and passed as *traced* arguments, so the
+jit cache is keyed on static shapes only — re-running with a different
+fleet or scenario values never recompiles.
+
+Equivalence contract (pinned by ``tests/test_sweep_engine.py``): the fused
+pipeline matches the composed ``sweep_scenarios`` + ``sweep_timeline`` +
+propagation path exactly (bit-for-bit) on every verdict key, sharded or
+not.
+"""
+
+from __future__ import annotations
+
+from contextlib import nullcontext
+from functools import partial
+from typing import Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.scenarios import (FleetAggregates, analytic_consts,
+                                  scenario_grid, scenario_outcome)
+from repro.core.timeline_sim import (PARAM_KEYS, TimelineConfig,
+                                     default_scenario, default_ts,
+                                     timeline_verdicts)
+from repro.dist import ctx as dist_ctx
+
+# mega-batch width for lax.map chunking: big enough to amortize scan-step
+# overhead, small enough that a chunk's per-step working set stays in
+# cache (measured fastest on CPU among {256..64k} widths)
+CHUNK = 4096
+# smallest padded width — tiny interactive grids don't pay for a full
+# 4096-wide chunk (and every bucket stays divisible by 8 devices)
+MIN_BUCKET = 256
+
+
+def _pow2_ceil(n: int) -> int:
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+def bucket_shape(n: int, chunk: int = CHUNK) -> tuple[int, int]:
+    """Padded ``(n_chunks, width)`` for an ``n``-scenario grid: width is a
+    power of two in [MIN_BUCKET, chunk], the chunk count a power of two —
+    so every grid size in a bucket compiles (and caches) the same shapes.
+    """
+    if n <= chunk:
+        return 1, max(MIN_BUCKET, _pow2_ceil(n))
+    return _pow2_ceil(-(-n // chunk)), chunk
+
+
+def _fused_verdicts(consts: Dict, p: Dict, ts, temporal: bool) -> Dict:
+    """ONE scenario, all stages: the analytic closed-form verdicts plus
+    (``temporal``) the ``t_``-prefixed timeline-scan verdicts — the same
+    kernels the standalone sweeps vmap, composed in one trace."""
+    out = dict(scenario_outcome(consts["a"], p))
+    if temporal:
+        tsum = timeline_verdicts(consts["t"], p, ts)
+        out.update({f"t_{k}": v for k, v in tsum.items()})
+    return out
+
+
+@partial(jax.jit, static_argnames=("temporal",), donate_argnums=(1,))
+def _run_chunks(consts, pchunks, ts, *, temporal):
+    """Fused pipeline, explicit ``dep_broken_frac``: lax.map over
+    ``(n_chunks, width)`` scenario mega-batches of a vmapped fused
+    scenario function."""
+    def one(p):
+        p = dict(p, dep_broken_frac=dist_ctx.hint(p["dep_broken_frac"],
+                                                  "batch"))
+        return jax.vmap(lambda q: _fused_verdicts(consts, q, ts,
+                                                  temporal))(p)
+    return lax.map(one, pchunks)
+
+
+@partial(jax.jit, static_argnames=("temporal",), donate_argnums=(2, 3))
+def _run_chunks_dep(consts, dep, pchunks, invchunks, dark_u, ts, *,
+                    temporal):
+    """Fused pipeline with the dependency stage in-program: propagate the
+    (U, n) unique dark sets to their fixed point, then every scenario
+    gathers its broken-critical fraction/counts by unique-fraction index —
+    no host materialization between propagation and the availability
+    model."""
+    from repro.graph.propagation import broken_critical_fractions
+    counts, frac, n_dark = broken_critical_fractions(dark_u, dep)
+
+    def one(args):
+        p, inv = args
+        p = dict(p, dep_broken_frac=dist_ctx.hint(frac[inv], "batch"))
+        out = jax.vmap(lambda q: _fused_verdicts(consts, q, ts,
+                                                 temporal))(p)
+        out["dep_n_broken_critical"] = counts[inv]
+        out["dep_n_dark"] = n_dark[inv]
+        return out
+    return lax.map(one, (pchunks, invchunks))
+
+
+def compiled_variants() -> int:
+    """Number of compiled pipeline programs (jit cache entries across both
+    entry points) — the scale bench asserts this does not grow across
+    grid sizes within a padding bucket."""
+    return int(_run_chunks._cache_size() + _run_chunks_dep._cache_size())
+
+
+class SweepEngine:
+    """One fleet's fused sweep pipeline: config uploaded once, then
+    ``run`` executes arbitrary scenario grids end to end in one jitted,
+    sharded program.
+
+    Parameters
+      agg       class-level fleet aggregates (the analytic model's input)
+      timeline  ``TimelineConfig`` (from ``Orchestrator.timeline_config()``
+                or ``config_for_fleet``)
+      graph     optional ``CallGraph`` — enables the in-pipeline
+                dependency stage (per-scenario blackholes keyed on
+                ``evict_fraction``, shared draws under ``seed``)
+      ts        time grid for the timeline scan (default 2h / 240 steps)
+      chunk     mega-batch width (power of two; default ``CHUNK``)
+      devices   devices to shard the scenario axis over (a sequence, or
+                an int meaning the first k of ``jax.devices()``).
+                Explicitly-passed devices always shard; the default (all
+                local devices) shards only multi-chunk grids, where the
+                partition overhead amortizes — small interactive grids
+                run single-device either way
+    """
+
+    def __init__(self, agg: FleetAggregates, timeline: TimelineConfig, *,
+                 graph=None, seed: int = 0,
+                 ts: Optional[np.ndarray] = None,
+                 chunk: int = CHUNK,
+                 devices: Optional[object] = None):
+        self.consts = {"a": analytic_consts(agg), "t": timeline.as_consts()}
+        self._preheat = timeline.preheat_s
+        self.ts = np.asarray(default_ts() if ts is None else ts, np.float64)
+        self._ts_dev = jnp.asarray(self.ts, jnp.float32)
+        self.chunk = int(chunk)
+        self.graph = graph
+        self.seed = seed
+        if graph is not None:
+            from repro.graph.propagation import dep_consts
+            self.dep = dep_consts(graph)
+        # explicit devices force sharding; by default shard only when the
+        # grid spills past one chunk — partition overhead loses on small
+        # grids (see the README scaling table), and the thin wrappers
+        # (sweep_scenarios / sweep_with_dependency_ensemble) must not
+        # silently slow the 256-scenario default down on multi-device
+        # hosts
+        self._devices_explicit = devices is not None
+        if devices is None:
+            devices = jax.devices()
+        elif isinstance(devices, int):
+            devices = jax.devices()[:devices]
+        self.devices = list(devices)
+        self.mesh = (jax.make_mesh((len(self.devices),), ("scenarios",),
+                                   devices=self.devices)
+                     if len(self.devices) > 1 else None)
+
+    # ------------------------------------------------------------------
+    def _params(self, grid: Dict[str, np.ndarray], n: int, shape) -> Dict:
+        """Bucket-pad + chunk the scenario axes to float32 ``shape``
+        arrays (missing axes filled with the operating-point defaults)."""
+        defaults = default_scenario(burst_delay_s=self._preheat)
+        out = {}
+        for k in PARAM_KEYS:
+            if k == "dep_broken_frac":
+                continue
+            col = (np.asarray(grid[k], np.float32) if k in grid
+                   else np.full(n, defaults[k], np.float32))
+            out[k] = self._chunked(col, shape)
+        return out
+
+    def _chunked(self, col: np.ndarray, shape) -> np.ndarray:
+        """(n,) -> (n_chunks, width), padding with the last scenario."""
+        pad = shape[0] * shape[1] - len(col)
+        if pad:
+            col = np.concatenate([col, np.repeat(col[-1:], pad, axis=0)])
+        return col.reshape(shape)
+
+    def _shard_for(self, shape) -> bool:
+        """Shard this run?  Explicit ``devices`` always shard; otherwise
+        only multi-chunk grids (> one CHUNK) amortize the partition
+        overhead."""
+        if self.mesh is None or shape[1] % len(self.devices):
+            return False
+        return self._devices_explicit or shape[0] > 1
+
+    def _put(self, tree, shard: bool):
+        """Shard the chunk axis over the scenario mesh (replicated when
+        sharding is off for this run)."""
+        if not shard:
+            return tree
+        return jax.device_put(
+            tree, NamedSharding(self.mesh, P(None, "scenarios")))
+
+    # ------------------------------------------------------------------
+    def dep_fractions(self, fractions: np.ndarray
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-scenario dependency verdicts as host arrays — the
+        *composed*-path helper the equivalence tests pit against the
+        in-pipeline stage: (broken_critical_frac f32, n_broken_critical
+        i32, n_dark i32), computed by the same device kernel."""
+        from repro.graph.propagation import (broken_critical_fractions,
+                                             shared_blackhole_draws)
+        dark_u, inv = shared_blackhole_draws(self.graph, fractions,
+                                             seed=self.seed)
+        counts, frac, n_dark = broken_critical_fractions(
+            jnp.asarray(dark_u), self.dep)
+        return (np.asarray(frac)[inv], np.asarray(counts)[inv],
+                np.asarray(n_dark)[inv])
+
+    # ------------------------------------------------------------------
+    def run(self, grid: Optional[Dict[str, np.ndarray]] = None,
+            dep_broken_frac: Optional[np.ndarray] = None,
+            temporal: bool = True) -> Dict[str, np.ndarray]:
+        """Evaluate every scenario in ``grid`` through the fused pipeline;
+        returns the analytic verdicts, the ``t_``-prefixed temporal
+        verdicts (unless ``temporal=False``), the grid axes, and — when
+        the engine has a graph and no explicit ``dep_broken_frac`` — the
+        ``dep_n_broken_critical`` / ``dep_n_dark`` propagation verdicts.
+        """
+        grid = scenario_grid() if grid is None else grid
+        n = len(next(iter(grid.values())))
+        shape = bucket_shape(n, self.chunk)
+        params = self._params(grid, n, shape)
+        use_dep = self.graph is not None and dep_broken_frac is None
+        shard = self._shard_for(shape)
+
+        rules = {"batch": "scenarios"}
+        cm = (dist_ctx.sharding_rules(self.mesh, rules)
+              if shard else nullcontext())
+        with cm:
+            if use_dep:
+                from repro.graph.propagation import shared_blackhole_draws
+                fractions = (np.asarray(grid["evict_fraction"])
+                             if "evict_fraction" in grid
+                             else np.ones(n))
+                dark_u, inv = shared_blackhole_draws(self.graph, fractions,
+                                                     seed=self.seed)
+                out = _run_chunks_dep(
+                    self.consts, self.dep,
+                    self._put(params, shard),
+                    self._put(self._chunked(inv, shape), shard),
+                    jnp.asarray(dark_u), self._ts_dev, temporal=temporal)
+            else:
+                frac = (np.zeros(n, np.float32) if dep_broken_frac is None
+                        else np.asarray(dep_broken_frac, np.float32))
+                params["dep_broken_frac"] = self._chunked(frac, shape)
+                out = _run_chunks(self.consts, self._put(params, shard),
+                                  self._ts_dev, temporal=temporal)
+
+        result = {k: np.asarray(v).reshape(-1, *v.shape[2:])[:n]
+                  for k, v in out.items()}
+        result.update({k: np.asarray(v) for k, v in grid.items()})
+        return result
+
+
+def fused_sweep(fs, grid: Optional[Dict[str, np.ndarray]] = None, *,
+                with_graph: bool = True, seed: int = 0, region=None,
+                ts: Optional[np.ndarray] = None, temporal: bool = True,
+                chunk: int = CHUNK,
+                devices: Optional[object] = None
+                ) -> Dict[str, np.ndarray]:
+    """Convenience one-shot: build the engine for a fleet (``FleetState``
+    or dict of ``ServiceSpec``) and run a grid through the full fused
+    pipeline (dependency stage included when the fleet has edges and
+    ``with_graph``)."""
+    from repro.core.timeline_sim import config_for_fleet
+    agg = (FleetAggregates.from_fleet_state(fs) if hasattr(fs, "fclass")
+           else FleetAggregates.from_fleet(fs))
+    graph = None
+    if with_graph and hasattr(fs, "fclass"):
+        from repro.graph import CallGraph
+        graph = CallGraph.from_fleet_state(fs)
+    timeline = config_for_fleet(fs, region=region)
+    eng = SweepEngine(agg, timeline, graph=graph, seed=seed, ts=ts,
+                      chunk=chunk, devices=devices)
+    return eng.run(grid, temporal=temporal)
+
+
+def tile_grid(grid: Dict[str, np.ndarray], n: int) -> Dict[str, np.ndarray]:
+    """Tile a scenario grid out to ``n`` rows (cycling the base grid) —
+    the scale benches use this to sweep {256 .. 100k+} scenario counts
+    with the paper's axes."""
+    return {k: np.resize(np.asarray(v), n) for k, v in grid.items()}

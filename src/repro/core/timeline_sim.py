@@ -304,19 +304,16 @@ def _schedule(c: Dict, p: Dict) -> Dict:
             "rl_shortfall": rl_shortfall, "rl_done_t": rl_done_t}
 
 
-def _instant(c: Dict, p: Dict, s: Dict, t) -> Dict:
-    """All per-step series at time ``t`` (pure function of the schedule —
-    the scan carry layers accumulators/first-crossings on top)."""
+def _instant_core(c: Dict, p: Dict, s: Dict, t) -> Dict:
+    """Per-step series the scan *carry* consumes (availability, the
+    demand-model utilization, the cloud draw, per-tier live cores) plus
+    the intermediates the trace-only extras derive from.  This is the
+    summary-only hot path — ``timeline_verdicts`` scans exactly this, the
+    trace path layers ``_instant`` on top, so summary outputs are the
+    same ops (hence bit-identical) in both."""
     mult = p["traffic_mult"]
     evicted = (t >= c["kill_s"] - EPS_T)
     e = jnp.where(evicted, p["evict_fraction"], 0.0)
-
-    # burst conversion ramp (10 spawner ticks, orchestrator semantics)
-    ticks = jnp.clip(jnp.floor((t - p["burst_delay_s"] + EPS_T)
-                               / jnp.maximum(s["tick_s"], 1e-9)), 0.0, 10.0)
-    burst_online = s["burst_cap"] * ticks / 10.0
-    burst_capacity = jnp.where(t >= p["burst_delay_s"] - EPS_T,
-                               s["burst_cap"], 0.0)
 
     # Active-Migrate MBB waves into burst
     am_waves_done = jnp.clip(
@@ -330,7 +327,6 @@ def _instant(c: Dict, p: Dict, s: Dict, t) -> Dict:
     # Always-On in-place upscale at migration completion
     ao_scaled = s["ao_ok"] & (t >= s["am_done_t"] - EPS_T)
     ao_live = c["ao"] * jnp.where(ao_scaled, mult, 1.0)
-    ao_extra = jnp.where(ao_scaled, s["ao_need"], 0.0)
 
     # Restore-Later waves: burst first, the cloud batch after provisioning
     rl_waves_done = jnp.clip(
@@ -347,32 +343,11 @@ def _instant(c: Dict, p: Dict, s: Dict, t) -> Dict:
     rl_live = c["rl"] - e * c["rl"] + rl_restored
     tm_live = c["tm"] * (1.0 - e)
 
-    # placed-pool accounting
-    steady_used = (c["steady_used0"] - e * c["sl_preempt_cores"]
-                   - am_moved * s["am_release_frac"] + ao_extra)
-    overcommit_used = c["overcommit_used0"] - e * c["oc_preempt_cores"]
-    burst_used = am_moved + rl_burst
-
-    # env-count series (orchestrator snapshot names)
-    am_bursted = am_envs_moved
-    am_steady = c["am_envs"] - am_bursted
-    rl_bursted = jnp.round(s["rl_envs_evicted"] * rl_restored
-                           / jnp.maximum(s["rl_need"], 1e-9))
-    rl_not_bursted = jnp.round(e * c["rl_envs"]) - rl_bursted
-    rl_t_steady = jnp.round((1.0 - e) * (c["rl_envs"] + c["tm_envs"]))
-    terminated = jnp.round(e * c["tm_envs"])
-
-    # utilization, orchestrator-mirror (traffic multiplier on survivors)
-    am_steady_cores = c["am"] - am_moved
-    pre_steady = (c["rl"] + c["tm"]) * (1.0 - e)
-    busy = (ao_live * _DEMAND_CRIT * mult
-            + am_steady_cores * _DEMAND_CRIT * mult
-            + pre_steady * _DEMAND_PRE)
-    utilization = jnp.minimum(1.0, busy / jnp.maximum(c["phys_cores"], 1.0))
-
     # demand-model utilization (drives the SLA verdict / QoS penalty):
     # Always-On busy is constant — the upscale spreads 2x demand over 2x
     # cores — while unmigrated AM absorbs the multiplier on 1x cores
+    am_steady_cores = c["am"] - am_moved
+    pre_steady = (c["rl"] + c["tm"]) * (1.0 - e)
     busy_model = (c["ao"] * _DEMAND_CRIT * mult
                   + am_steady_cores * _DEMAND_CRIT * mult
                   + pre_steady * _DEMAND_PRE)
@@ -403,49 +378,75 @@ def _instant(c: Dict, p: Dict, s: Dict, t) -> Dict:
     frac = class_live / jnp.maximum(class_total, 1e-9)
     tier_live = (c["tier_class"] * frac[None, :]).sum(axis=1)
 
-    return {"steady_used": steady_used, "overcommit_used": overcommit_used,
-            "burst_capacity": burst_capacity, "burst_online": burst_online,
-            "burst_used": burst_used, "cloud_used": cloud_prov,
-            "ao_live": ao_live, "am_live": c["am"] + 0.0 * t,
-            "rl_live": rl_live, "tm_live": tm_live,
-            "am_steady": am_steady, "am_bursted": am_bursted,
-            "rl_bursted": rl_bursted, "rl_not_bursted": rl_not_bursted,
-            "rl_t_steady": rl_t_steady, "terminated": terminated,
-            "utilization": utilization, "util_model": util_model,
+    return {"e": e, "evicted": evicted, "am_envs_moved": am_envs_moved,
+            "am_moved": am_moved, "ao_scaled": ao_scaled,
+            "ao_live": ao_live, "rl_restored": rl_restored,
+            "rl_burst": rl_burst, "rl_live": rl_live, "tm_live": tm_live,
+            "am_steady_cores": am_steady_cores,
+            "cloud_used": cloud_prov, "util_model": util_model,
             "availability": availability, "tier_live": tier_live}
 
 
-def _simulate(c: Dict, p: Dict, ts: jnp.ndarray) -> Tuple[Dict, Dict]:
-    """One scenario: scan the step function over ``ts``; returns
-    (per-step traces, per-scenario summary/verdicts)."""
-    s = _schedule(c, p)
-    tier_total = jnp.maximum(c["tier_class"].sum(axis=1), 1e-9)
+def _instant(c: Dict, p: Dict, s: Dict, t) -> Dict:
+    """All per-step series at time ``t`` (pure function of the schedule —
+    the scan carry layers accumulators/first-crossings on top): the
+    summary core plus the trace-only extras (pool accounting, env counts,
+    the conversion ramp, physical utilization)."""
+    k = _instant_core(c, p, s, t)
+    mult = p["traffic_mult"]
+    e = k["e"]
 
-    def body(carry, t):
-        out = _instant(c, p, s, t)
-        dt = jnp.maximum(t - carry["prev_t"], 0.0)
-        frac = out["tier_live"] / tier_total
-        below = frac < RESTORE_THRESH
-        below_seen = carry["below_seen"] | below
-        restore_t = jnp.where(
-            below_seen & ~below & jnp.isinf(carry["restore_t"]),
-            t, carry["restore_t"])
-        new = {
-            "prev_t": t,
-            "avail_int": carry["avail_int"] + out["availability"] * dt,
-            "avail_min": jnp.minimum(carry["avail_min"],
-                                     out["availability"]),
-            "util_peak": jnp.maximum(carry["util_peak"],
-                                     out["util_model"]),
-            "cloud_peak": jnp.maximum(carry["cloud_peak"],
-                                      out["cloud_used"]),
-            "below_seen": below_seen, "restore_t": restore_t,
-        }
-        return new, out
+    # burst conversion ramp (10 spawner ticks, orchestrator semantics)
+    ticks = jnp.clip(jnp.floor((t - p["burst_delay_s"] + EPS_T)
+                               / jnp.maximum(s["tick_s"], 1e-9)), 0.0, 10.0)
+    burst_online = s["burst_cap"] * ticks / 10.0
+    burst_capacity = jnp.where(t >= p["burst_delay_s"] - EPS_T,
+                               s["burst_cap"], 0.0)
 
+    ao_extra = jnp.where(k["ao_scaled"], s["ao_need"], 0.0)
+
+    # placed-pool accounting
+    steady_used = (c["steady_used0"] - e * c["sl_preempt_cores"]
+                   - k["am_moved"] * s["am_release_frac"] + ao_extra)
+    overcommit_used = c["overcommit_used0"] - e * c["oc_preempt_cores"]
+    burst_used = k["am_moved"] + k["rl_burst"]
+
+    # env-count series (orchestrator snapshot names)
+    am_bursted = k["am_envs_moved"]
+    am_steady = c["am_envs"] - am_bursted
+    rl_bursted = jnp.round(s["rl_envs_evicted"] * k["rl_restored"]
+                           / jnp.maximum(s["rl_need"], 1e-9))
+    rl_not_bursted = jnp.round(e * c["rl_envs"]) - rl_bursted
+    rl_t_steady = jnp.round((1.0 - e) * (c["rl_envs"] + c["tm_envs"]))
+    terminated = jnp.round(e * c["tm_envs"])
+
+    # utilization, orchestrator-mirror (traffic multiplier on survivors)
+    pre_steady = (c["rl"] + c["tm"]) * (1.0 - e)
+    busy = (k["ao_live"] * _DEMAND_CRIT * mult
+            + k["am_steady_cores"] * _DEMAND_CRIT * mult
+            + pre_steady * _DEMAND_PRE)
+    utilization = jnp.minimum(1.0, busy / jnp.maximum(c["phys_cores"], 1.0))
+
+    return {"steady_used": steady_used, "overcommit_used": overcommit_used,
+            "burst_capacity": burst_capacity, "burst_online": burst_online,
+            "burst_used": burst_used, "cloud_used": k["cloud_used"],
+            "ao_live": k["ao_live"], "am_live": c["am"] + 0.0 * t,
+            "rl_live": k["rl_live"], "tm_live": k["tm_live"],
+            "am_steady": am_steady, "am_bursted": am_bursted,
+            "rl_bursted": rl_bursted, "rl_not_bursted": rl_not_bursted,
+            "rl_t_steady": rl_t_steady, "terminated": terminated,
+            "utilization": utilization, "util_model": k["util_model"],
+            "availability": k["availability"],
+            "tier_live": k["tier_live"]}
+
+
+def _carry0(ts) -> Dict:
+    """Initial scan carry — every leaf pinned to a strong float32/bool so
+    no Python-scalar weak type (or x64-mode float64) leaks into the scan
+    carry (regression-tested by ``tests/test_sweep_engine.py``)."""
     f32 = jnp.float32
-    carry0 = {
-        "prev_t": ts[0],
+    return {
+        "prev_t": jnp.asarray(ts[0], f32),
         "avail_int": jnp.asarray(0.0, f32),
         "avail_min": jnp.asarray(1.0, f32),
         "util_peak": jnp.asarray(0.0, f32),
@@ -453,8 +454,34 @@ def _simulate(c: Dict, p: Dict, ts: jnp.ndarray) -> Tuple[Dict, Dict]:
         "below_seen": jnp.zeros(N_TIERS, bool),
         "restore_t": jnp.full(N_TIERS, jnp.inf, f32),
     }
-    carry, traces = jax.lax.scan(body, carry0, ts)
 
+
+def _carry_step(carry: Dict, core: Dict, t, tier_total) -> Dict:
+    """Fold one step's core series into the running accumulators /
+    first-crossing trackers (shared by the trace and summary-only scans)."""
+    dt = jnp.maximum(t - carry["prev_t"], 0.0)
+    frac = core["tier_live"] / tier_total
+    below = frac < RESTORE_THRESH
+    below_seen = carry["below_seen"] | below
+    restore_t = jnp.where(
+        below_seen & ~below & jnp.isinf(carry["restore_t"]),
+        t, carry["restore_t"])
+    return {
+        "prev_t": jnp.asarray(t, jnp.float32),
+        "avail_int": carry["avail_int"] + core["availability"] * dt,
+        "avail_min": jnp.minimum(carry["avail_min"],
+                                 core["availability"]),
+        "util_peak": jnp.maximum(carry["util_peak"],
+                                 core["util_model"]),
+        "cloud_peak": jnp.maximum(carry["cloud_peak"],
+                                  core["cloud_used"]),
+        "below_seen": below_seen, "restore_t": restore_t,
+    }
+
+
+def _finalize(c: Dict, p: Dict, s: Dict, carry: Dict, ts) -> Dict:
+    """Per-scenario summary/verdicts from the final carry (shared by the
+    trace and summary-only paths — identical ops, identical bits)."""
     span = jnp.maximum(ts[-1] - ts[0], 1e-9)
     availability_mean = carry["avail_int"] / span
     time_to_restore = jnp.where(carry["below_seen"], carry["restore_t"], 0.0)
@@ -493,12 +520,48 @@ def _simulate(c: Dict, p: Dict, ts: jnp.ndarray) -> Tuple[Dict, Dict]:
         "preempt_fit": preempt_fit, "dep_ok": dep_ok,
         "avail_ok": avail_ok, "util_ok": util_ok, "sla_ok": sla_ok,
     }
-    return traces, summary
+    return summary
+
+
+def _simulate(c: Dict, p: Dict, ts: jnp.ndarray) -> Tuple[Dict, Dict]:
+    """One scenario: scan the step function over ``ts``; returns
+    (per-step traces, per-scenario summary/verdicts)."""
+    s = _schedule(c, p)
+    tier_total = jnp.maximum(c["tier_class"].sum(axis=1), 1e-9)
+
+    def body(carry, t):
+        out = _instant(c, p, s, t)      # superset of the core series
+        return _carry_step(carry, out, t, tier_total), out
+
+    carry, traces = jax.lax.scan(body, _carry0(ts), ts)
+    return traces, _finalize(c, p, s, carry, ts)
+
+
+def timeline_verdicts(c: Dict, p: Dict, ts: jnp.ndarray) -> Dict:
+    """Summary-only timeline kernel for ONE scenario (scalar params): the
+    same ``lax.scan`` as ``_simulate`` but with no per-step trace outputs,
+    so the compiled program never materializes the (T, series) stack —
+    the fused sweep engine vmaps this over bucket-padded scenario chunks.
+    Summary outputs are op-for-op identical to ``_simulate``'s (pinned by
+    ``tests/test_sweep_engine.py``)."""
+    s = _schedule(c, p)
+    tier_total = jnp.maximum(c["tier_class"].sum(axis=1), 1e-9)
+
+    def body(carry, t):
+        core = _instant_core(c, p, s, t)
+        return _carry_step(carry, core, t, tier_total), None
+
+    carry, _ = jax.lax.scan(body, _carry0(ts), ts)
+    return _finalize(c, p, s, carry, ts)
 
 
 _simulate_jit = jax.jit(_simulate)
-# vmap over the scenario axis only: consts and the time grid are shared
+# vmap over the scenario axis only: consts and the time grid are shared.
+# The trace variant materializes the full (S, T, series) stack; the
+# summary variant is the default sweep path (verdicts only).
 _sweep_jit = jax.jit(jax.vmap(_simulate, in_axes=(None, 0, None)))
+_sweep_summary_jit = jax.jit(jax.vmap(timeline_verdicts,
+                                      in_axes=(None, 0, None)))
 
 
 def _as_params(p: Dict[str, float]) -> Dict[str, jnp.ndarray]:
@@ -551,13 +614,17 @@ def sweep_timeline(cfg: TimelineConfig,
         if k not in params:
             params[k] = jnp.full(n, defaults[k], jnp.float32)
     ts = default_ts() if ts is None else np.asarray(ts, np.float64)
-    traces, summary = _sweep_jit(cfg.as_consts(), params,
-                                 jnp.asarray(ts, jnp.float32))
-    out = {k: np.asarray(v) for k, v in summary.items()}
+    tsj = jnp.asarray(ts, jnp.float32)
     if return_traces:
+        traces, summary = _sweep_jit(cfg.as_consts(), params, tsj)
+        out = {k: np.asarray(v) for k, v in summary.items()}
         out["t"] = ts
         out.update({f"trace_{k}": np.asarray(v) for k, v in traces.items()})
-    return out
+        return out
+    # summary-only kernel: same ops for the verdicts, but the (S, T,
+    # series) trace stack is never materialized
+    summary = _sweep_summary_jit(cfg.as_consts(), params, tsj)
+    return {k: np.asarray(v) for k, v in summary.items()}
 
 
 def summarize_timeline_sweep(result: Dict[str, np.ndarray]

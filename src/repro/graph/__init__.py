@@ -11,11 +11,14 @@ from repro.graph.callgraph import CallGraph
 from repro.graph.planner import (GateResult, HardeningPlan, plan_hardening,
                                  regression_gate)
 from repro.graph.propagation import (Certification, blackhole_ensemble,
-                                     blast_radius, certify, propagate,
-                                     propagate_many)
+                                     blast_radius,
+                                     broken_critical_fractions, certify,
+                                     dep_consts, propagate, propagate_many,
+                                     shared_blackhole_draws)
 
 __all__ = [
     "CallGraph", "Certification", "GateResult", "HardeningPlan",
-    "blackhole_ensemble", "blast_radius", "certify", "plan_hardening",
-    "propagate", "propagate_many", "regression_gate",
+    "blackhole_ensemble", "blast_radius", "broken_critical_fractions",
+    "certify", "dep_consts", "plan_hardening", "propagate",
+    "propagate_many", "regression_gate", "shared_blackhole_draws",
 ]

@@ -102,6 +102,54 @@ def radius_counts(sources: np.ndarray, n: int, src_d, dst_d, closed_d,
     return out
 
 
+def dep_consts(graph: CallGraph) -> Dict[str, jnp.ndarray]:
+    """Device-resident propagation constants for the fused sweep engine:
+    int32 edge endpoints, the fail-close mask, the critical mask and the
+    (f32) critical count.  Upload once per graph; every fused pipeline
+    call reuses them (keyed jit cache on shapes only)."""
+    return {"src": jnp.asarray(graph.src, jnp.int32),
+            "dst": jnp.asarray(graph.dst, jnp.int32),
+            "closed": jnp.asarray(~graph.fail_open),
+            "crit": jnp.asarray(graph.critical),
+            "n_crit": jnp.asarray(max(1, int(graph.critical.sum())),
+                                  jnp.float32)}
+
+
+def shared_blackhole_draws(graph: CallGraph, fractions: np.ndarray,
+                           seed: int = 0
+                           ) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side stage precompute for the fused engine: the
+    ``blackhole_ensemble`` shared-draw semantics (one uniform per service,
+    scenario s darkens preemptibles with ``u < fractions[s]``) compressed
+    to *unique* fractions — equal fractions share one dark set, so a 100k
+    scenario grid with a handful of ``evict_fraction`` values propagates
+    a handful of dark sets, not 100k.  Returns ``(dark_unique (U, n)
+    bool, inverse (S,) int32)`` with ``dark_unique[inverse]`` the full
+    per-scenario dark matrix (never materialized)."""
+    rng = np.random.default_rng(seed)
+    fractions = np.asarray(fractions, np.float64)
+    u = rng.random(graph.n)                  # same stream as the ensemble
+    uniq, inverse = np.unique(fractions, return_inverse=True)
+    dark = (u[None, :] < uniq[:, None]) & graph.preemptible[None, :]
+    return dark, inverse.astype(np.int32)
+
+
+def broken_critical_fractions(dark_u: jnp.ndarray, dep: Dict
+                              ) -> tuple[jnp.ndarray, jnp.ndarray,
+                                         jnp.ndarray]:
+    """Traceable blackhole verdicts for a (U, n) dark batch against
+    ``dep_consts`` arrays: per-row broken-critical counts (int32), the
+    f32 broken-critical fraction that feeds the availability penalty, and
+    the dark-set sizes (int32).  Runs the same ``_fixed_point`` kernel as
+    ``propagate_many`` but stays on device — the fused sweep engine calls
+    it *inside* its jitted pipeline."""
+    broken, _ = _fixed_point(dark_u, dep["src"], dep["dst"], dep["closed"])
+    counts = (broken & dep["crit"][None, :]).sum(axis=1).astype(jnp.int32)
+    frac = counts.astype(jnp.float32) / dep["n_crit"]
+    n_dark = dark_u.sum(axis=1).astype(jnp.int32)
+    return counts, frac, n_dark
+
+
 def propagate_many(graph: CallGraph, dark: np.ndarray
                    ) -> tuple[np.ndarray, int]:
     """dark (S, n) bool -> (broken (S, n) bool, rounds)."""
