@@ -70,4 +70,73 @@ def bench_kernels() -> List[Row]:
     return rows
 
 
-ALL = [bench_kernels]
+def bench_ufa_kernels() -> List[Row]:
+    """The three UFA hot-path kernels (``repro.kernels.ufa``), cold and
+    warm, at paper-shaped sizes — interpret-mode wall clock on CPU."""
+    import numpy as np
+
+    from repro.kernels.ufa.ingest import ingest_hist
+    from repro.kernels.ufa.propagation import ell_from_csr, fixed_point_ell
+    from repro.kernels.ufa.reduce import timeline_reduce
+
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+
+    # frontier propagation: 4k services, avg degree ~4, 64-scenario batch
+    n = 4096
+    m = rng.random((n, n)) < (4.0 / n)
+    np.fill_diagonal(m, False)
+    src, dst = np.nonzero(m)
+    closed = rng.random(len(src)) < 0.5
+    indptr = np.searchsorted(src, np.arange(n + 1))
+    ed, ec, _ = ell_from_csr(n, indptr, dst, closed)
+    dark = jnp.asarray(rng.random((64, n)) < 0.1)
+    ed_d, ec_d = jnp.asarray(ed), jnp.asarray(ec)
+
+    def prop():
+        b, r = fixed_point_ell(dark, ed_d, ec_d)
+        return b.block_until_ready()
+
+    us_cold, _ = timed(prop, repeat=1)
+    us, _ = timed(prop)
+    rows.append(("kernel_ufa_propagation_cold", us_cold,
+                 "includes jit compile"))
+    rows.append(("kernel_ufa_propagation", us,
+                 f"64x{n} scenarios, {len(src)} edges, K={ed.shape[1]}"))
+
+    # histogram ingest: one 4M-record chunk over a 100k-edge universe
+    n_edges, n_rec = 100_000, 4_000_000
+    eid = jnp.asarray(rng.integers(0, n_edges, n_rec))
+    fl = jnp.asarray(rng.random(n_rec) < 0.3)
+    er = jnp.asarray(rng.random(n_rec) < 0.4)
+
+    def ingest():
+        return ingest_hist(eid, fl, er, n_edges).block_until_ready()
+
+    us_cold, _ = timed(ingest, repeat=1)
+    us, _ = timed(ingest)
+    rows.append(("kernel_ufa_ingest_cold", us_cold, "includes jit compile"))
+    rows.append(("kernel_ufa_ingest", us,
+                 f"{n_rec/1e6:.0f}M records x {n_edges} edges, "
+                 f"{n_rec/(us/1e6)/1e6:.1f}M rec/s"))
+
+    # verdict reduction: 4096 scenarios x 240 steps x 3 tiers
+    S, T, R = 4096, 240, 3
+    a = jnp.asarray(rng.random((S, T), dtype=np.float32))
+    fr = jnp.asarray((0.99 + 0.02 * rng.random((S, T, R))
+                      ).astype(np.float32))
+    ts = jnp.asarray(np.linspace(0.0, 7200.0, T, dtype=np.float32))
+
+    def reduce_():
+        out = timeline_reduce(a, a, a, fr, ts, thresh=0.999)
+        return out["avail_int"].block_until_ready()
+
+    us_cold, _ = timed(reduce_, repeat=1)
+    us, _ = timed(reduce_)
+    rows.append(("kernel_ufa_reduce_cold", us_cold, "includes jit compile"))
+    rows.append(("kernel_ufa_reduce", us,
+                 f"{S}x{T}x{R} series, {S/(us/1e6):,.0f} scen/s"))
+    return rows
+
+
+ALL = [bench_kernels, bench_ufa_kernels]

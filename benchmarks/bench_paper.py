@@ -387,13 +387,57 @@ def bench_runtime_detection_scale() -> List[Row]:
         "precision": ra["precision"], "recall": ra["recall"],
         "missed": ra["missed"], "missed_cold": ra["missed_cold"],
     })
-    derived = (f"services={fs.n} edges={fs.edges.n} "
-               f"records={ra['n_records']/1e6:.1f}M "
+    derived = (f"backend=cpu-numpy-fused services={fs.n} "
+               f"edges={fs.edges.n} records={ra['n_records']/1e6:.1f}M "
                f"gen+ingest={rate/1e6:.1f}M/s end_to_end_s={total_s:.2f} "
                f"precision={ra['precision']:.2f} recall={ra['recall']:.2f} "
                f"missed_cold={ra['missed_cold']}/{ra['missed']} "
                f"(acceptance: >10M rec/s, <10s at scale=1.0)")
-    return [("runtime_detection_scale", us, derived)]
+    rows = [("runtime_detection_scale", us, derived)]
+
+    # backend-labelled ingest rows: the same chunk through the fused
+    # single-pass host bincount (the CPU production path behind
+    # ``ingest_batch``) and the Pallas scatter-add histogram kernel in
+    # interpret mode (the accelerator path; interpret wall clock tracks
+    # the trajectory, it is not a device projection)
+    import jax.numpy as jnp
+
+    from repro.kernels.ufa.ingest import ingest_hist
+
+    rng = np.random.default_rng(SEED)
+    n_edges = fs.edges.n
+    n_rec = 4_000_000
+    eid = rng.integers(0, n_edges, n_rec)
+    code = ((rng.random(n_rec) < 0.3).astype(np.uint8) << 1) \
+        | (rng.random(n_rec) < 0.4)
+
+    def numpy_fused():
+        return np.bincount(eid.astype(np.int32) * 4 + code,
+                           minlength=4 * n_edges).reshape(-1, 4)
+
+    us_np, counts_np = timed(numpy_fused, repeat=3)
+    rows.append(("runtime_ingest_fused_numpy", us_np,
+                 f"backend=cpu {n_rec/1e6:.0f}M records x {n_edges} edges, "
+                 f"{n_rec/(us_np/1e6)/1e6:.1f}M rec/s"))
+
+    eid_d = jnp.asarray(eid)
+    failed_d = jnp.asarray(code >= 2)
+    errored_d = jnp.asarray((code & 1).astype(bool))
+
+    def pallas_ingest():
+        return np.asarray(ingest_hist(eid_d, failed_d, errored_d, n_edges,
+                                      interpret=True))
+
+    us_cold, _ = timed(pallas_ingest, repeat=1)
+    us_warm, counts_pl = timed(pallas_ingest, repeat=3)
+    assert np.array_equal(counts_pl, counts_np)       # exact, both paths
+    rows.append(("runtime_ingest_pallas_interp_cold", us_cold,
+                 "backend=cpu-interpret, includes jit compile"))
+    rows.append(("runtime_ingest_pallas_interp", us_warm,
+                 f"backend=cpu-interpret {n_rec/1e6:.0f}M records, "
+                 f"{n_rec/(us_warm/1e6)/1e6:.1f}M rec/s, bit-equal to "
+                 f"the numpy path"))
+    return rows
 
 
 def bench_graph_propagation() -> List[Row]:
@@ -590,6 +634,21 @@ def bench_fused_sweep_scale() -> List[Row]:
         f"fused 64k rate {rates[65536]:,.0f}/s is only {speedup:.1f}x the "
         f"composed 256-scenario rate {composed_rate:,.0f}/s (need >=10x)")
 
+    # backend-labelled reducer rows: the same 256-scenario grid with the
+    # timeline carry through the segmented Pallas verdict-reduction
+    # kernel (interpret mode on CPU — trajectory only; the dispatch
+    # default keeps plain CPU on the bit-exact scan path)
+    eng_pal = orch.sweep_engine(graph=graph, seed=SEED, reducer="pallas")
+    grid256 = tile_grid(base, 256)
+    us_pcold, _ = timed(eng_pal.run, grid256, repeat=1)
+    us_pwarm, pres = timed(eng_pal.run, grid256, repeat=3)
+    pal_rate = 256 / (us_pwarm / 1e6)
+    rows.append(("fused_sweep_256_pallas_cold", us_pcold,
+                 "reducer=pallas backend=cpu-interpret, includes compile"))
+    rows.append(("fused_sweep_256_pallas", us_pwarm,
+                 f"reducer=pallas backend=cpu-interpret, "
+                 f"{pal_rate:,.0f} scen/s"))
+
     record_extra("fused_sweep_scale", {
         "composed_256_rate_per_s": composed_rate,
         "composed_256_warm_s": us_composed / 1e6,
@@ -597,6 +656,10 @@ def bench_fused_sweep_scale() -> List[Row]:
         "speedup_vs_composed_64k": speedup,
         "no_recompile_within_bucket": no_recompile,
         "devices": len(eng.devices),
+        "pallas_reducer_256": {"cold_s": us_pcold / 1e6,
+                               "warm_s": us_pwarm / 1e6,
+                               "scenarios_per_s": pal_rate,
+                               "n_t_sla_ok": int(pres["t_sla_ok"].sum())},
     })
     rows.append(("fused_sweep_composed_baseline", us_composed,
                  f"PR-4 composed path, 256 scen, "

@@ -94,6 +94,17 @@ def main() -> int:
         if ratio > args.factor:
             violations.append((name, base, us, ratio))
 
+    # rows on only one side are informational, never gated: new kernels /
+    # benches enter the trajectory here, retired ones leave it
+    new_only = sorted(n for n in fresh_rows if n not in base_rows)
+    retired = sorted(n for n in base_rows if n not in fresh_rows)
+    if new_only:
+        print(f"info: {len(new_only)} new row(s) not in baseline "
+              f"(not gated): {', '.join(new_only)}")
+    if retired:
+        print(f"info: {len(retired)} baseline row(s) retired: "
+              f"{', '.join(retired)}")
+
     ok = True
     if errors:
         print(f"FAIL: {len(errors)} errored row(s): {', '.join(errors)}")

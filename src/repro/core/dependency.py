@@ -17,11 +17,16 @@ path:
     form of inverse-CDF sampling — plus Bernoulli failure/error draws),
     returning ``(edge_id, callee_failed, caller_errored)`` arrays instead
     of dataclass objects;
-  * edge statistics are scatter-add accumulations into four per-edge count
-    arrays (``np.bincount`` — measured ~7x faster than XLA's CPU scatter
-    for the same segment-sum — folded into int64 accumulators, so evidence
-    streams through ``ingest_batch`` chunk by chunk without ever
-    materializing the full record stream);
+  * edge statistics are one fused scatter-add histogram per chunk — a
+    2-bit outcome code per record, one ``(n_edges, 4)`` histogram giving
+    all four per-edge count columns in a single pass, folded into int64
+    accumulators so evidence streams through ``ingest_batch`` chunk by
+    chunk without ever materializing the full record stream.  On CPU the
+    histogram is a host ``np.bincount`` (measured ~7x faster than XLA's
+    CPU scatter for the same segment-sum); on accelerator backends (or
+    ``REPRO_UFA_KERNELS=1``) it is the device-resident Pallas kernel in
+    ``repro.kernels.ufa.ingest`` — same dispatch rule as
+    ``kernels.backend.default_interpret``;
   * ``detect()`` is a jitted threshold kernel over the count arrays.
 
 The scalar reference implementation (one ``RPCRecord`` per RPC, a Python
@@ -50,6 +55,7 @@ import jax.numpy as jnp
 
 from repro.core.fleet_state import FleetState
 from repro.core.service import ServiceSpec
+from repro.kernels.backend import use_ufa_kernels as _use_ufa_kernels
 
 # chunk size for the streaming sample->ingest loop: big enough to amortize
 # kernel dispatch, small enough to keep transient arrays off the heap
@@ -394,17 +400,40 @@ class RuntimeFailCloseDetector:
     def ingest_batch(self, edge_id: np.ndarray, callee_failed: np.ndarray,
                      caller_errored: np.ndarray):
         """Scatter-add one chunk of the stream into the per-edge counts
-        (the segment-sum reduction of the array engine)."""
-        eid = np.asarray(edge_id)
-        failed = np.asarray(callee_failed, bool)
-        errored = np.asarray(caller_errored, bool)
+        (the segment-sum reduction of the array engine), fused to a
+        single pass: each record gets the 2-bit outcome code
+        ``2 * callee_failed + caller_errored`` and one histogram of
+        ``edge_id * 4 + code`` yields all four detector columns at once
+        (vs the historical four masks + four ``bincount`` sweeps).
+
+        Backend dispatch (``repro.kernels.backend.use_ufa_kernels``): on
+        accelerators the chunk stays device-resident through the Pallas
+        scatter-add histogram kernel and only the (n_edges, 4) int32
+        block crosses to the host; on CPU the fused ``np.bincount`` is
+        the measured-faster fallback.  Both fold into the same int64
+        accumulators."""
         n = self.n_edges
-        self.calls += np.bincount(eid, minlength=n)
-        self.callee_failures += np.bincount(eid[failed], minlength=n)
-        self.errors_given_failure += np.bincount(eid[failed & errored],
-                                                 minlength=n)
-        self.errors_given_ok += np.bincount(eid[~failed & errored],
-                                            minlength=n)
+        if n and _use_ufa_kernels():
+            from repro.kernels.ufa.ingest import ingest_hist
+            counts = np.asarray(
+                ingest_hist(jnp.asarray(edge_id), jnp.asarray(callee_failed),
+                            jnp.asarray(caller_errored), n), np.int64)
+        else:
+            eid = np.asarray(edge_id)
+            code = ((np.asarray(callee_failed, np.uint8) << 1)
+                    | np.asarray(caller_errored, np.uint8))
+            key_t = np.int64 if 4 * n >= (1 << 31) else np.int32
+            counts = np.bincount(eid.astype(key_t) * 4 + code,
+                                 minlength=4 * n).reshape(-1, 4)
+        self.calls += counts.sum(axis=1)
+        self.callee_failures += counts[:, 2] + counts[:, 3]
+        self.errors_given_failure += counts[:, 3]
+        self.errors_given_ok += counts[:, 1]
+        # int64 headroom guard: far before wraparound could corrupt the
+        # evidence (2^62 calls on one edge is ~70k years of the paper's
+        # 62T RPCs/week), fail loudly instead
+        assert int(self.calls.max(initial=0)) < (1 << 62), \
+            "per-edge call count approaching int64 overflow"
 
     def ingest(self, records: Iterable[RPCRecord]):
         """Record-object compat: intern edges, then batch-ingest."""

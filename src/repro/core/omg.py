@@ -254,7 +254,7 @@ class Orchestrator:
 
     # ------------------------------------------------------------------
     def sweep_engine(self, *, graph=None, seed: int = 0, ts=None,
-                     devices=None):
+                     devices=None, reducer=None):
         """Fused sweep engine over THIS orchestrator's steady state: the
         analytic model, the timeline scan and (with ``graph``) the
         dependency propagation composed in one jitted, device-parallel
@@ -268,7 +268,8 @@ class Orchestrator:
                if hasattr(self.fs, "fclass")
                else FleetAggregates.from_fleet(self.fs))
         return SweepEngine(agg, self.timeline_config(), graph=graph,
-                           seed=seed, ts=ts, devices=devices)
+                           seed=seed, ts=ts, devices=devices,
+                           reducer=reducer)
 
     # ------------------------------------------------------------------
     def class_cores(self, fc: FailureClass, placement: Optional[str] = None

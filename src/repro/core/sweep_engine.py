@@ -56,8 +56,10 @@ from repro.core.scenarios import (FleetAggregates, analytic_consts,
                                   scenario_grid, scenario_outcome)
 from repro.core.timeline_sim import (PARAM_KEYS, TimelineConfig,
                                      default_scenario, default_ts,
-                                     timeline_verdicts)
+                                     timeline_verdicts,
+                                     timeline_verdicts_batch)
 from repro.dist import ctx as dist_ctx
+from repro.kernels import backend as _kbackend
 
 # mega-batch width for lax.map chunking: big enough to amortize scan-step
 # overhead, small enough that a chunk's per-step working set stays in
@@ -93,35 +95,53 @@ def _fused_verdicts(consts: Dict, p: Dict, ts, temporal: bool) -> Dict:
     return out
 
 
-@partial(jax.jit, static_argnames=("temporal",), donate_argnums=(1,))
-def _run_chunks(consts, pchunks, ts, *, temporal):
+def _fused_verdicts_block(consts: Dict, p: Dict, ts, temporal: bool,
+                          reducer: str) -> Dict:
+    """One WIDTH-wide scenario block.  ``reducer="scan"`` vmaps the
+    per-scenario fused trace (the historical, bit-exact default path);
+    ``reducer="pallas"`` keeps the analytic stage identical but runs the
+    timeline carry through the segmented Pallas verdict-reduction kernel
+    (``timeline_verdicts_batch``) — exact on every verdict except the
+    float32-tight availability integral."""
+    if reducer == "pallas" and temporal:
+        out = dict(jax.vmap(
+            lambda q: dict(scenario_outcome(consts["a"], q)))(p))
+        tsum = timeline_verdicts_batch(consts["t"], p, ts)
+        out.update({f"t_{k}": v for k, v in tsum.items()})
+        return out
+    return jax.vmap(lambda q: _fused_verdicts(consts, q, ts, temporal))(p)
+
+
+@partial(jax.jit, static_argnames=("temporal", "reducer"),
+         donate_argnums=(1,))
+def _run_chunks(consts, pchunks, ts, *, temporal, reducer="scan"):
     """Fused pipeline, explicit ``dep_broken_frac``: lax.map over
-    ``(n_chunks, width)`` scenario mega-batches of a vmapped fused
-    scenario function."""
+    ``(n_chunks, width)`` scenario mega-batches of the fused scenario
+    block function."""
     def one(p):
         p = dict(p, dep_broken_frac=dist_ctx.hint(p["dep_broken_frac"],
                                                   "batch"))
-        return jax.vmap(lambda q: _fused_verdicts(consts, q, ts,
-                                                  temporal))(p)
+        return _fused_verdicts_block(consts, p, ts, temporal, reducer)
     return lax.map(one, pchunks)
 
 
-@partial(jax.jit, static_argnames=("temporal",), donate_argnums=(2, 3))
+@partial(jax.jit, static_argnames=("temporal", "reducer"),
+         donate_argnums=(2, 3))
 def _run_chunks_dep(consts, dep, pchunks, invchunks, dark_u, ts, *,
-                    temporal):
+                    temporal, reducer="scan"):
     """Fused pipeline with the dependency stage in-program: propagate the
-    (U, n) unique dark sets to their fixed point, then every scenario
-    gathers its broken-critical fraction/counts by unique-fraction index —
-    no host materialization between propagation and the availability
-    model."""
+    (U, n) unique dark sets to their fixed point (backend-dispatched —
+    the Pallas ELL kernel when ``dep`` carries the ELL adjacency), then
+    every scenario gathers its broken-critical fraction/counts by
+    unique-fraction index — no host materialization between propagation
+    and the availability model."""
     from repro.graph.propagation import broken_critical_fractions
     counts, frac, n_dark = broken_critical_fractions(dark_u, dep)
 
     def one(args):
         p, inv = args
         p = dict(p, dep_broken_frac=dist_ctx.hint(frac[inv], "batch"))
-        out = jax.vmap(lambda q: _fused_verdicts(consts, q, ts,
-                                                 temporal))(p)
+        out = _fused_verdicts_block(consts, p, ts, temporal, reducer)
         out["dep_n_broken_critical"] = counts[inv]
         out["dep_n_dark"] = n_dark[inv]
         return out
@@ -155,13 +175,25 @@ class SweepEngine:
                 local devices) shards only multi-chunk grids, where the
                 partition overhead amortizes — small interactive grids
                 run single-device either way
+      reducer   timeline-carry backend: "scan" (sequential ``lax.scan``,
+                bit-exact vs the composed sweeps) or "pallas" (the
+                segmented verdict-reduction kernel; float32-tight on the
+                availability integral, exact elsewhere).  Default: per
+                backend via ``kernels.backend.use_ufa_kernels()`` —
+                "pallas" on accelerators / ``REPRO_UFA_KERNELS=1``,
+                "scan" on plain CPU
     """
 
     def __init__(self, agg: FleetAggregates, timeline: TimelineConfig, *,
                  graph=None, seed: int = 0,
                  ts: Optional[np.ndarray] = None,
                  chunk: int = CHUNK,
-                 devices: Optional[object] = None):
+                 devices: Optional[object] = None,
+                 reducer: Optional[str] = None):
+        if reducer is None:
+            reducer = "pallas" if _kbackend.use_ufa_kernels() else "scan"
+        assert reducer in ("scan", "pallas"), reducer
+        self.reducer = reducer
         self.consts = {"a": analytic_consts(agg), "t": timeline.as_consts()}
         self._preheat = timeline.preheat_s
         self.ts = np.asarray(default_ts() if ts is None else ts, np.float64)
@@ -273,13 +305,15 @@ class SweepEngine:
                     self.consts, self.dep,
                     self._put(params, shard),
                     self._put(self._chunked(inv, shape), shard),
-                    jnp.asarray(dark_u), self._ts_dev, temporal=temporal)
+                    jnp.asarray(dark_u), self._ts_dev, temporal=temporal,
+                    reducer=self.reducer)
             else:
                 frac = (np.zeros(n, np.float32) if dep_broken_frac is None
                         else np.asarray(dep_broken_frac, np.float32))
                 params["dep_broken_frac"] = self._chunked(frac, shape)
                 out = _run_chunks(self.consts, self._put(params, shard),
-                                  self._ts_dev, temporal=temporal)
+                                  self._ts_dev, temporal=temporal,
+                                  reducer=self.reducer)
 
         result = {k: np.asarray(v).reshape(-1, *v.shape[2:])[:n]
                   for k, v in out.items()}

@@ -523,6 +523,36 @@ def _finalize(c: Dict, p: Dict, s: Dict, carry: Dict, ts) -> Dict:
     return summary
 
 
+def timeline_verdicts_batch(c: Dict, p: Dict, ts: jnp.ndarray, *,
+                            interpret=None) -> Dict:
+    """Summary verdicts for a BATCH of scenarios (every param leaf
+    ``(S,)``) with the scan carry replaced by the segmented Pallas
+    verdict-reduction kernel (``repro.kernels.ufa.reduce``): the
+    schedule/instant ops are the identical ``_schedule``/``_instant_core``
+    functions vmapped over (scenario, step), so the per-step series are
+    bit-identical to the scan path — but the T sequential carry steps
+    become one blocked reduction over the whole (S, T) slab.  Min/max and
+    first-crossing outputs are exact vs ``timeline_verdicts``; the
+    availability integral is a reordered float32 sum (float32-tight, not
+    bitwise), which is why the sweep engine selects this path per backend
+    (``reducer="pallas"``) rather than by default."""
+    from repro.kernels.ufa.reduce import timeline_reduce
+
+    def series_one(q):
+        sch = _schedule(c, q)
+        core = jax.vmap(lambda t: _instant_core(c, q, sch, t))(ts)
+        return sch, core
+
+    s, core = jax.vmap(series_one)(p)
+    tier_total = jnp.maximum(c["tier_class"].sum(axis=1), 1e-9)
+    carry = timeline_reduce(
+        core["availability"], core["util_model"], core["cloud_used"],
+        core["tier_live"] / tier_total, ts,
+        thresh=RESTORE_THRESH, interpret=interpret)
+    return jax.vmap(lambda q, sch, cr: _finalize(c, q, sch, cr, ts))(
+        p, s, carry)
+
+
 def _simulate(c: Dict, p: Dict, ts: jnp.ndarray) -> Tuple[Dict, Dict]:
     """One scenario: scan the step function over ``ts``; returns
     (per-step traces, per-scenario summary/verdicts)."""

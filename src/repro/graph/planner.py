@@ -23,7 +23,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.graph.callgraph import CallGraph
-from repro.graph.propagation import (_fixed_point, blast_radius, certify,
+from repro.graph.propagation import (blast_radius, certify, edge_consts,
+                                     fixed_point, harden_consts,
                                      radius_counts)
 
 
@@ -66,17 +67,15 @@ def plan_hardening(graph: CallGraph, batch: int = 64,
     dark = np.asarray(graph.preemptible, bool)
     crit_live = graph.critical & ~dark
     closed = ~graph.fail_open.copy()           # host mirror of the mask
-    src_d = jnp.asarray(graph.src)
-    dst_d = jnp.asarray(graph.dst)
+    consts = edge_consts(graph)                # backend-dispatched kernel
     crit_d = jnp.asarray(graph.critical)
-    closed_d = jnp.asarray(closed)
     dark_d = jnp.asarray(dark[None, :])
     hardened: List[int] = []
     trajectory: List[Dict[str, int]] = []
     rounds = 0
     certified = False
     while rounds < max_rounds:
-        broken_d, _ = _fixed_point(dark_d, src_d, dst_d, closed_d)
+        broken_d, _ = fixed_point(dark_d, consts)
         broken = np.asarray(broken_d[0])
         n_bc = int(np.count_nonzero(broken & crit_live))
         trajectory.append({"n_hardened": len(hardened),
@@ -91,8 +90,7 @@ def plan_hardening(graph: CallGraph, batch: int = 64,
                                   & ~dark[graph.src])
         assert len(frontier) > 0, "broken criticals without a frontier edge"
         callers = np.unique(graph.src[frontier])
-        counts = radius_counts(callers, graph.n, src_d, dst_d, closed_d,
-                               crit_d)
+        counts = radius_counts(callers, graph.n, consts, crit_d)
         radius = np.zeros(graph.n, np.int32)
         radius[callers] = counts
         score = radius[graph.src[frontier]].astype(np.float64)
@@ -103,7 +101,7 @@ def plan_hardening(graph: CallGraph, batch: int = 64,
         pick = frontier[np.argsort(-score, kind="stable")[:batch]]
         hardened.extend(int(i) for i in pick)
         closed[pick] = False
-        closed_d = closed_d.at[jnp.asarray(pick)].set(False)
+        consts = harden_consts(consts, jnp.asarray(pick))
     g = graph.harden(hardened)
     if not certified:
         # ran out of rounds after a harden — the last cert is stale

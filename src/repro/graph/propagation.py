@@ -15,6 +15,21 @@ mask as a ``jnp`` array), so a 256-scenario blackhole ensemble over the
 ~22k-SE paper fleet is a handful of vectorized sweeps, not 256 graph
 traversals.  A scalar BFS reference lives in ``tests/test_graph.py`` and
 pins the kernel exactly.
+
+Two interchangeable propagation backends sit behind ``fixed_point``:
+
+  * the XLA scatter-max loop (``_fixed_point``, the historical path and
+    the CPU default), and
+  * the blocked ELL gather/reduce Pallas kernel
+    (``repro.kernels.ufa.propagation``), selected when the edge consts
+    carry the ELL adjacency — which ``edge_consts``/``dep_consts`` attach
+    when ``repro.kernels.backend.use_ufa_kernels()`` says so
+    (accelerator backends, or ``REPRO_UFA_KERNELS=1``).
+
+Both produce bit-identical ``broken`` matrices and round counts; every
+entry point (``certify``, ``blast_radius``, ``propagate_many``, the
+fused sweep engine's in-pipeline stage, the planner's frontier batches)
+routes through the dispatcher.
 """
 
 from __future__ import annotations
@@ -28,6 +43,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.graph.callgraph import CallGraph
+from repro.kernels import backend as _backend
+from repro.kernels.ufa import propagation as _pallas_prop
 
 # blast_radius pads source batches to multiples of _BUCKET (capped at
 # _CHUNK rows per propagation) so jit compiles a handful of shapes, not one
@@ -64,29 +81,86 @@ def _fixed_point(dark: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
 
 
 @jax.jit
-def _radius_kernel(dark: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
-                   closed: jnp.ndarray, crit: jnp.ndarray):
+def _radius_kernel(dark: jnp.ndarray, consts: Dict[str, jnp.ndarray],
+                   crit: jnp.ndarray):
     """Batched blast-radius counts: propagate the (B, n) dark batch to its
-    fixed point and reduce to per-row broken-critical counts *on device*,
-    so only (B,) ints cross the host boundary (the (B, n) broken matrix
-    never does)."""
-    broken, _ = _fixed_point(dark, src, dst, closed)
+    fixed point (backend-dispatched) and reduce to per-row
+    broken-critical counts *on device*, so only (B,) ints cross the host
+    boundary (the (B, n) broken matrix never does)."""
+    broken, _ = fixed_point(dark, consts)
     return (broken & crit[None, :]).sum(axis=1).astype(jnp.int32)
 
 
-def _device_edges(graph: CallGraph):
-    return (jnp.asarray(graph.src), jnp.asarray(graph.dst),
-            jnp.asarray(~graph.fail_open))
+def fixed_point(dark: jnp.ndarray, consts: Dict[str, jnp.ndarray]):
+    """Backend-dispatched batched fixed point: the ELL Pallas kernel when
+    ``consts`` carries the ELL adjacency (see ``edge_consts``), the XLA
+    scatter-max loop otherwise.  Bit-identical results either way
+    (booleans and round counts are exact).  Traceable — the fused sweep
+    engine calls it inside its jitted pipeline (the dict-key check is a
+    trace-time static)."""
+    if "ell_dst" in consts and consts["ell_dst"].shape[1] > 0:
+        return _pallas_prop.fixed_point_ell(dark, consts["ell_dst"],
+                                            consts["ell_closed"])
+    return _fixed_point(dark, consts["src"], consts["dst"],
+                        consts["closed"])
 
 
-def radius_counts(sources: np.ndarray, n: int, src_d, dst_d, closed_d,
-                  crit_d) -> np.ndarray:
+def _ell_topology(graph: CallGraph):
+    """Cached node-topology half of the ELL build (``ell_dst``/``slot``
+    depend only on src/dst/indptr, not on the fail-close mask, so they
+    survive ``harden``-style mask churn; the mask half is a cheap scatter
+    recomputed per ``edge_consts`` call)."""
+    cache = getattr(graph, "_ell_topology", None)
+    if cache is None:
+        ell_dst, _, slot = _pallas_prop.ell_from_csr(
+            graph.n, graph.indptr, graph.dst, ~graph.fail_open)
+        cache = (ell_dst, slot)
+        object.__setattr__(graph, "_ell_topology", cache)
+    return cache
+
+
+def edge_consts(graph: CallGraph) -> Dict[str, jnp.ndarray]:
+    """Device-resident propagation constants: int32 edge endpoints plus
+    the fail-close mask, and — when the Pallas path is on
+    (``backend.use_ufa_kernels()``) — the ELL adjacency the kernel
+    consumes (``ell_dst``/``ell_closed`` (n, K), plus ``ell_slot`` (E,)
+    so ``harden_consts`` can flip individual edges in place)."""
+    out = {"src": jnp.asarray(graph.src, jnp.int32),
+           "dst": jnp.asarray(graph.dst, jnp.int32),
+           "closed": jnp.asarray(~graph.fail_open)}
+    if _backend.use_ufa_kernels():
+        ell_dst, slot = _ell_topology(graph)
+        if ell_dst.shape[1] > 0:
+            closed = ~graph.fail_open
+            ell_closed = np.zeros(ell_dst.shape, bool)
+            ell_closed[graph.src, slot] = closed
+            out["ell_dst"] = jnp.asarray(ell_dst)
+            out["ell_closed"] = jnp.asarray(ell_closed)
+            out["ell_slot"] = jnp.asarray(slot)
+    return out
+
+
+def harden_consts(consts: Dict[str, jnp.ndarray],
+                  pick: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Convert edges ``pick`` (CSR indices) to fail-open in the device
+    consts — both the edge-list mask and, when present, its ELL mirror —
+    without re-uploading anything else (the planner's per-round update).
+    """
+    out = dict(consts, closed=consts["closed"].at[pick].set(False))
+    if "ell_closed" in consts:
+        out["ell_closed"] = consts["ell_closed"].at[
+            consts["src"][pick], consts["ell_slot"][pick]].set(False)
+    return out
+
+
+def radius_counts(sources: np.ndarray, n: int,
+                  consts: Dict[str, jnp.ndarray], crit_d) -> np.ndarray:
     """Blast-radius counts for ``sources`` against device-resident edge
-    arrays — the reusable closure the hardening planner calls once per
-    greedy round (the device arrays are uploaded once, not per call).
-    Sources are swept in bucket-padded batches (multiples of _BUCKET up to
-    _CHUNK) through the jitted kernel; returns counts aligned with
-    ``sources``."""
+    consts (``edge_consts``) — the reusable closure the hardening planner
+    calls once per greedy round (the device arrays are uploaded once, not
+    per call).  Sources are swept in bucket-padded batches (multiples of
+    _BUCKET up to _CHUNK) through the jitted kernel; returns counts
+    aligned with ``sources``."""
     sources = np.asarray(sources, np.int64)
     out = np.zeros(len(sources), np.int32)
     for lo in range(0, len(sources), _CHUNK):
@@ -96,23 +170,21 @@ def radius_counts(sources: np.ndarray, n: int, src_d, dst_d, closed_d,
         pad[:len(chunk)] = chunk
         dark = np.zeros((width, n), bool)
         dark[np.arange(width), pad] = True
-        counts = _radius_kernel(jnp.asarray(dark), src_d, dst_d,
-                                closed_d, crit_d)
+        counts = _radius_kernel(jnp.asarray(dark), consts, crit_d)
         out[lo:lo + len(chunk)] = np.asarray(counts)[:len(chunk)]
     return out
 
 
 def dep_consts(graph: CallGraph) -> Dict[str, jnp.ndarray]:
     """Device-resident propagation constants for the fused sweep engine:
-    int32 edge endpoints, the fail-close mask, the critical mask and the
-    (f32) critical count.  Upload once per graph; every fused pipeline
-    call reuses them (keyed jit cache on shapes only)."""
-    return {"src": jnp.asarray(graph.src, jnp.int32),
-            "dst": jnp.asarray(graph.dst, jnp.int32),
-            "closed": jnp.asarray(~graph.fail_open),
-            "crit": jnp.asarray(graph.critical),
-            "n_crit": jnp.asarray(max(1, int(graph.critical.sum())),
-                                  jnp.float32)}
+    ``edge_consts`` plus the critical mask and the (f32) critical count.
+    Upload once per graph; every fused pipeline call reuses them (keyed
+    jit cache on shapes only)."""
+    out = edge_consts(graph)
+    out["crit"] = jnp.asarray(graph.critical)
+    out["n_crit"] = jnp.asarray(max(1, int(graph.critical.sum())),
+                                jnp.float32)
+    return out
 
 
 def shared_blackhole_draws(graph: CallGraph, fractions: np.ndarray,
@@ -143,7 +215,7 @@ def broken_critical_fractions(dark_u: jnp.ndarray, dep: Dict
     the dark-set sizes (int32).  Runs the same ``_fixed_point`` kernel as
     ``propagate_many`` but stays on device — the fused sweep engine calls
     it *inside* its jitted pipeline."""
-    broken, _ = _fixed_point(dark_u, dep["src"], dep["dst"], dep["closed"])
+    broken, _ = fixed_point(dark_u, dep)
     counts = (broken & dep["crit"][None, :]).sum(axis=1).astype(jnp.int32)
     frac = counts.astype(jnp.float32) / dep["n_crit"]
     n_dark = dark_u.sum(axis=1).astype(jnp.int32)
@@ -155,7 +227,7 @@ def propagate_many(graph: CallGraph, dark: np.ndarray
     """dark (S, n) bool -> (broken (S, n) bool, rounds)."""
     dark = np.asarray(dark, bool)
     assert dark.ndim == 2 and dark.shape[1] == graph.n, dark.shape
-    broken, rounds = _fixed_point(jnp.asarray(dark), *_device_edges(graph))
+    broken, rounds = fixed_point(jnp.asarray(dark), edge_consts(graph))
     return np.asarray(broken), int(rounds)
 
 
@@ -230,8 +302,7 @@ def blast_radius(graph: CallGraph,
     out = np.zeros(graph.n, np.int32)
     if len(sources) == 0:
         return out
-    src_d, dst_d, closed_d = _device_edges(graph)
-    out[sources] = radius_counts(sources, graph.n, src_d, dst_d, closed_d,
+    out[sources] = radius_counts(sources, graph.n, edge_consts(graph),
                                  jnp.asarray(graph.critical))
     return out
 

@@ -1,0 +1,51 @@
+"""Backend dispatch shared by every Pallas wrapper in the repo.
+
+Two questions every kernel call site asks:
+
+  * ``default_interpret()`` — should ``pl.pallas_call`` run in interpret
+    mode?  True only on CPU (this container / CI), False on any real
+    accelerator backend (TPU, GPU): interpret mode executes the kernel
+    body with XLA ops on the host, which is what keeps kernel tests
+    honest where no accelerator exists but would silently throw away the
+    device compilation everywhere else.  (The old ``ops._default_interpret``
+    returned True for *any* non-TPU backend, forcing interpret mode on
+    GPU — this helper is the backend-aware replacement.)
+
+  * ``use_ufa_kernels()`` — should the UFA hot paths (propagation fixed
+    point, telemetry ingest, sweep reductions) route through the Pallas
+    kernels in ``repro.kernels.ufa`` at all?  Default: yes on any
+    accelerator, no on CPU — the CPU reference paths (``np.bincount``
+    ingest, XLA scatter propagation, ``lax.scan`` reductions) are the
+    measured winners there (PR 3 clocked host ``bincount`` 7x ahead of
+    XLA's CPU scatter).  ``REPRO_UFA_KERNELS=1`` / ``=0`` overrides in
+    either direction — CI sets ``1`` to drive the Pallas paths under
+    interpret mode, and it is the escape hatch if a backend misbehaves.
+
+Both read ``jax.default_backend()`` at call time (cheap, cached by JAX),
+so a process that initializes JAX late still dispatches correctly.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+# backends with a real Pallas lowering (Mosaic on TPU, Triton on GPU)
+_ACCELERATOR_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def default_interpret() -> bool:
+    """Interpret-mode default for ``pl.pallas_call``: True only on CPU."""
+    return jax.default_backend() not in _ACCELERATOR_BACKENDS
+
+
+def use_ufa_kernels() -> bool:
+    """Route the UFA hot paths through the Pallas kernels?  Accelerators
+    yes, CPU no (the bincount/XLA fallbacks win there); the
+    ``REPRO_UFA_KERNELS`` env var forces either way (read per call, so
+    tests/CI can flip it without re-importing)."""
+    env = os.environ.get("REPRO_UFA_KERNELS", "").strip()
+    if env in ("0", "1"):
+        return env == "1"
+    return jax.default_backend() in _ACCELERATOR_BACKENDS

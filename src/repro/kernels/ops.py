@@ -1,6 +1,7 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``interpret`` defaults to True on CPU (this container) and False on TPU, so
+``interpret`` defaults to True on CPU (this container) and False on any
+real accelerator backend (TPU/GPU) — see ``repro.kernels.backend`` — so
 the same call sites work in tests and production.  Layout plumbing between
 the model's (B, S, H, d) convention and the kernels' blocked layouts lives
 here, not in the model.
@@ -19,10 +20,7 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import grouped_matmul as _gmm
 from repro.kernels import rmsnorm as _rms
 from repro.kernels import ssd_scan as _ssd
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels.backend import default_interpret as _default_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",

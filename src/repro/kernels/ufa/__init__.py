@@ -1,0 +1,30 @@
+"""Pallas kernels for the UFA hot paths (ROADMAP item 4).
+
+Three blocked kernels, one per profiled hot spot, each with an XLA
+reference implementation in the same module and exact-parity dispatch at
+the call site:
+
+  * ``propagation`` — the multi-hop failure-propagation fixed point as a
+    blocked ELL gather/reduce, batched over blackhole ensembles
+    (replaces the scatter-heavy ``lax.while_loop`` body in
+    ``graph/propagation.py``);
+  * ``ingest``      — the telemetry scatter-add histogram: four per-edge
+    RPC count columns accumulated device-resident in one pass over
+    ``(edge_id, callee_failed, caller_errored)`` chunks
+    (``core/dependency.py``; host ``np.bincount`` stays the CPU
+    fallback);
+  * ``reduce``      — the segmented timeline verdict reduction
+    (availability integral/floor, peaks, per-tier restore first
+    crossings) over whole scenario chunks at once, replacing the
+    sequential ``lax.scan`` carry in ``core/sweep_engine.py``'s
+    mega-batches.
+
+Dispatch rule (see ``repro.kernels.backend``): the Pallas path runs by
+default on accelerator backends and whenever ``REPRO_UFA_KERNELS=1``;
+plain CPU keeps the measured-faster XLA/bincount fallbacks.  Wrappers
+follow the house idiom of ``kernels/ops.py``: jitted, block sizes and
+``interpret`` static, ``interpret`` defaulting via
+``backend.default_interpret()`` (True only on CPU).
+"""
+
+from repro.kernels.ufa import ingest, propagation, reduce  # noqa: F401

@@ -1,0 +1,127 @@
+"""Segmented timeline verdict-reduction Pallas kernel.
+
+``core/timeline_sim.timeline_verdicts`` folds the per-step series into
+its summary carry with a sequential ``lax.scan`` — T dependent steps per
+scenario, even though every accumulator is associative: the availability
+integral is a dot with the step widths, the floor/peaks are min/max, and
+the per-tier restore time is a first-crossing over a cumulative-OR.
+This kernel reduces a whole scenario block at once:
+
+    avail_int  = sum_t availability * dt        (dt[0] = 0, scan parity)
+    avail_min  = min(1, min_t availability)
+    util_peak  = max(0, max_t util_model)
+    cloud_peak = max(0, max_t cloud_used)
+    below      = tier_frac < thresh             (S, T, R)
+    seen       = cumulative-OR_t below
+    restore_t  = min_t { ts[t] : seen[t] & ~below[t] }   (inf if never)
+    below_seen = seen[:, -1, :]
+
+Min/max/first-crossing outputs are *exact* vs the scan (selections, not
+sums); ``avail_int`` is a reordered float32 sum, so parity is
+float32-tight rather than bitwise — which is why the sweep engine
+dispatches this path per backend (``reducer="pallas"``) instead of
+making it the CPU default (the default scan path stays bit-identical to
+the composed sweeps, as pinned by ``tests/test_sweep_engine.py``).
+
+``ref_timeline_reduce`` is the XLA reference (same math, plain ``jnp``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.backend import default_interpret
+
+
+def _reduce_kernel(a_ref, u_ref, cl_ref, fr_ref, dt_ref, ts_ref,
+                   stats_ref, restore_ref, seen_ref, *, thresh: float):
+    a = a_ref[...]                                     # (block_s, T)
+    stats_ref[...] = jnp.stack([
+        jnp.sum(a * dt_ref[...], axis=1),
+        jnp.minimum(jnp.min(a, axis=1), 1.0),
+        jnp.maximum(jnp.max(u_ref[...], axis=1), 0.0),
+        jnp.maximum(jnp.max(cl_ref[...], axis=1), 0.0),
+    ], axis=1)
+    below = fr_ref[...] < thresh                       # (block_s, T, R)
+    seen = jax.lax.associative_scan(jnp.logical_or, below, axis=1)
+    crossed = seen & jnp.logical_not(below)
+    restore_ref[...] = jnp.min(
+        jnp.where(crossed, ts_ref[...][0][None, :, None], jnp.inf), axis=1)
+    seen_ref[...] = seen[:, -1, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("thresh", "block_s", "interpret"))
+def timeline_reduce(avail: jnp.ndarray, util: jnp.ndarray,
+                    cloud: jnp.ndarray, tier_frac: jnp.ndarray,
+                    ts: jnp.ndarray, *, thresh: float,
+                    block_s: int = 128,
+                    interpret: Optional[bool] = None
+                    ) -> Dict[str, jnp.ndarray]:
+    """avail/util/cloud (S, T) f32, tier_frac (S, T, R) f32, ts (T,) f32
+    -> the scan-carry equivalents (all f32 / bool, shapes (S,) / (S, R)).
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    S, T = avail.shape
+    R = tier_frac.shape[2]
+    dt = jnp.maximum(jnp.diff(ts, prepend=ts[:1]), 0.0)
+    dt2 = dt.astype(jnp.float32).reshape(1, T)
+    ts2 = ts.astype(jnp.float32).reshape(1, T)
+
+    block_s = min(block_s, S)
+    s_pad = -(-S // block_s) * block_s
+    pad = ((0, s_pad - S), (0, 0))
+    stats, restore, seen = pl.pallas_call(
+        functools.partial(_reduce_kernel, thresh=thresh),
+        grid=(s_pad // block_s,),
+        in_specs=[
+            pl.BlockSpec((block_s, T), lambda s: (s, 0)),
+            pl.BlockSpec((block_s, T), lambda s: (s, 0)),
+            pl.BlockSpec((block_s, T), lambda s: (s, 0)),
+            pl.BlockSpec((block_s, T, R), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, T), lambda s: (0, 0)),
+            pl.BlockSpec((1, T), lambda s: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_s, 4), lambda s: (s, 0)),
+            pl.BlockSpec((block_s, R), lambda s: (s, 0)),
+            pl.BlockSpec((block_s, R), lambda s: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s_pad, 4), jnp.float32),
+            jax.ShapeDtypeStruct((s_pad, R), jnp.float32),
+            jax.ShapeDtypeStruct((s_pad, R), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(jnp.pad(avail, pad), jnp.pad(util, pad), jnp.pad(cloud, pad),
+      jnp.pad(tier_frac, (*pad, (0, 0)), constant_values=1.0), dt2, ts2)
+    return {"avail_int": stats[:S, 0], "avail_min": stats[:S, 1],
+            "util_peak": stats[:S, 2], "cloud_peak": stats[:S, 3],
+            "restore_t": restore[:S], "below_seen": seen[:S]}
+
+
+@functools.partial(jax.jit, static_argnames=("thresh",))
+def ref_timeline_reduce(avail: jnp.ndarray, util: jnp.ndarray,
+                        cloud: jnp.ndarray, tier_frac: jnp.ndarray,
+                        ts: jnp.ndarray, *, thresh: float
+                        ) -> Dict[str, jnp.ndarray]:
+    """XLA reference: identical math, no blocking."""
+    dt = jnp.maximum(jnp.diff(ts, prepend=ts[:1]), 0.0).astype(jnp.float32)
+    below = tier_frac < thresh
+    seen = jax.lax.associative_scan(jnp.logical_or, below, axis=1)
+    crossed = seen & jnp.logical_not(below)
+    return {
+        "avail_int": jnp.sum(avail * dt[None, :], axis=1),
+        "avail_min": jnp.minimum(jnp.min(avail, axis=1), 1.0),
+        "util_peak": jnp.maximum(jnp.max(util, axis=1), 0.0),
+        "cloud_peak": jnp.maximum(jnp.max(cloud, axis=1), 0.0),
+        "restore_t": jnp.min(
+            jnp.where(crossed, ts.astype(jnp.float32)[None, :, None],
+                      jnp.inf), axis=1),
+        "below_seen": seen[:, -1, :],
+    }
