@@ -12,6 +12,7 @@ benchmark JSON via ``record_extra``).
 
 from __future__ import annotations
 
+import time
 from typing import List
 
 import numpy as np
@@ -668,6 +669,36 @@ def bench_fused_sweep_scale() -> List[Row]:
                  f"64k fused at {rates[65536]:,.0f} scen/s = "
                  f"{speedup:.1f}x composed (assert >=10x) on "
                  f"{len(eng.devices)} device(s)"))
+
+    # (c) observability agreement: with the metrics plane ON, the
+    # engine's self-reported interior throughput (the
+    # ufa_sweep_scenarios_per_s gauge) must agree with the harness's
+    # exterior wall-clock measurement of the SAME warm call within 5% —
+    # i.e. the plane reports the truth and costs ~nothing
+    from repro import obs
+    grid4k = tile_grid(base, 4096)
+    eng.run(grid4k)                       # warm this bucket with obs off
+    was_on = obs.enabled()
+    obs.enable()
+    try:
+        t0 = time.perf_counter()
+        eng.run(grid4k)
+        ext_s = time.perf_counter() - t0
+        ext_rate = 4096 / ext_s
+        int_rate = obs.value("ufa_sweep_scenarios_per_s")
+        rel = abs(int_rate - ext_rate) / ext_rate
+    finally:
+        if not was_on:
+            obs.disable()
+    assert rel <= 0.05, (
+        f"obs-reported rate {int_rate:,.0f}/s disagrees with measured "
+        f"{ext_rate:,.0f}/s by {rel:.1%} (need <=5%)")
+    record_extra("fused_sweep_obs_agreement", {
+        "interior_scen_per_s": int_rate, "exterior_scen_per_s": ext_rate,
+        "relative_error": rel})
+    rows.append(("fused_sweep_obs_agreement", ext_s * 1e6,
+                 f"metrics on: gauge {int_rate:,.0f} scen/s vs measured "
+                 f"{ext_rate:,.0f} scen/s ({rel:.2%} apart, assert <=5%)"))
     return rows
 
 

@@ -31,3 +31,26 @@ def timed(fn: Callable, *args, repeat: int = 3, **kw) -> Tuple[float, object]:
 def emit(rows: List[Row]):
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+
+def bench_meta() -> Dict[str, object]:
+    """Environment stamp for BENCH_*.json: backend / device count / jax
+    version, so cross-machine perf trajectories stay interpretable."""
+    import platform
+    meta: Dict[str, object] = {
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+    }
+    try:
+        import jax
+        devs = jax.devices()
+        meta.update(jax_version=jax.__version__,
+                    backend=devs[0].platform, n_devices=len(devs))
+    except Exception:
+        meta.update(jax_version=None, backend=None, n_devices=0)
+    try:
+        from repro.kernels.backend import use_ufa_kernels
+        meta["ufa_kernels"] = bool(use_ufa_kernels())
+    except Exception:
+        meta["ufa_kernels"] = None
+    return meta

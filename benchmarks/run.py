@@ -21,11 +21,20 @@ def main() -> None:
                     "dominate runtime) — the CI smoke configuration")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write rows + extras as JSON")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="enable the observability plane for the whole "
+                    "run and write a Prometheus snapshot of the metrics "
+                    "registry (bench rows included as "
+                    "ufa_bench_us_per_call gauges)")
     args = ap.parse_args()
     args.no_kernels = args.no_kernels or args.quick
 
+    if args.metrics_out:
+        from repro import obs
+        obs.enable()
+
     from benchmarks import bench_paper
-    from benchmarks.common import EXTRAS, emit
+    from benchmarks.common import EXTRAS, bench_meta, emit
 
     suites = list(bench_paper.ALL)
     if not args.no_kernels:
@@ -52,6 +61,7 @@ def main() -> None:
 
     if args.json:
         payload = {
+            "meta": bench_meta(),
             # NaN (error rows) -> null: keep the artifact strict JSON
             "rows": [{"name": n,
                       "us_per_call": None if us != us else us,
@@ -63,6 +73,14 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.json}", file=sys.stderr)
+    if args.metrics_out:
+        from repro import obs
+        from repro.obs import export
+        for n, us, _ in all_rows:
+            if us == us:                      # skip NaN error rows
+                obs.set_gauge("ufa_bench_us_per_call", us, name=n)
+        export.write_prometheus(args.metrics_out)
+        print(f"wrote {args.metrics_out}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -9,9 +9,14 @@ certified with the regression gate.  Prints the hardened-edge count next
 to the paper's 4,000+ figure.
 
   PYTHONPATH=src python examples/harden_fleet.py
+  # with host-phase tracing + a metrics snapshot:
+  PYTHONPATH=src python examples/harden_fleet.py --trace --metrics-out
 """
 
+import argparse
+import os
 import time
+from contextlib import nullcontext
 
 import numpy as np
 
@@ -29,6 +34,29 @@ SEED = 7
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", nargs="?", const="harden_trace.json",
+                    default=None, metavar="PATH",
+                    help="write a Chrome trace of the pipeline's host "
+                         "phases (open in https://ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", nargs="?", const="harden_metrics.prom",
+                    default=None, metavar="PATH",
+                    help="enable the metrics registry and write a "
+                         "Prometheus snapshot (+ JSONL next to it)")
+    args = ap.parse_args()
+    tracer, prof = None, None
+    if args.trace or args.metrics_out:
+        from repro import obs
+        from repro.obs.profiler import Profiler
+        obs.enable()
+        if args.trace:
+            tracer = obs.Tracer()
+            obs.set_tracer(tracer)
+        prof = Profiler(tracer)
+
+    def phase(name):
+        return prof.phase(name) if prof is not None else nullcontext()
+
     # ---- detect ---------------------------------------------------------
     fleet = synthesize_fleet(scale=SCALE, seed=SEED, unsafe_fraction=0.10,
                              unsafe_chain_fraction=0.04)
@@ -36,8 +64,10 @@ def main():
     print(f"fleet: {len(fleet)} services, {len(truth)} planted fail-close "
           f"edges (incl. critical->critical relay chains)")
 
-    ra = runtime_analysis(fleet, n_records=1_500_000, seed=SEED)
-    sa = static_analysis(fleet, seed=SEED)
+    with phase("runtime-detection"):
+        ra = runtime_analysis(fleet, n_records=1_500_000, seed=SEED)
+    with phase("static-analysis"):
+        sa = static_analysis(fleet, seed=SEED)
     detected = (ra["found"] | sa["found"])
     recall = len(detected & truth) / max(1, len(truth))
     print(f"detection: runtime={len(ra['found'])} static={len(sa['found'])} "
@@ -54,7 +84,8 @@ def main():
 
     # ---- plan hardening -------------------------------------------------
     t0 = time.time()
-    plan = plan_hardening(graph, batch=12)
+    with phase("plan-hardening"):
+        plan = plan_hardening(graph, batch=12)
     print(f"\nhardening planner: {plan.n_hardened} edges converted "
           f"fail-open over {plan.rounds} rounds ({time.time() - t0:.1f}s) "
           f"-> certified={plan.certified}")
@@ -87,8 +118,9 @@ def main():
                                 unsafe_chain_fraction=0.05)
     g_paper = CallGraph.from_fleet_state(fs)
     t0 = time.time()
-    cert_paper = certify(g_paper)
-    ens = blackhole_ensemble(g_paper, n_scenarios=256, seed=SEED)
+    with phase("certify-paper-scale"):
+        cert_paper = certify(g_paper)
+        ens = blackhole_ensemble(g_paper, n_scenarios=256, seed=SEED)
     dt = time.time() - t0
     print(f"\npaper scale: {g_paper.n} SEs / {g_paper.n_edges} edges — "
           f"full certification + 256-scenario blackhole ensemble in "
@@ -101,6 +133,22 @@ def main():
     print(f"scenario sweep with dependency verdicts: "
           f"{s['n_dep_ok']}/{s['n_scenarios']} scenarios dependency-clean, "
           f"worst broken-critical fraction {s['worst_dep_broken_frac']:.3f}")
+
+    if args.trace or args.metrics_out:
+        from repro import obs
+        from repro.obs import export
+        if args.trace:
+            tracer.save(args.trace)
+            print(f"\nwrote {args.trace} ({len(tracer)} events; load in "
+                  f"https://ui.perfetto.dev)")
+        if args.metrics_out:
+            export.write_prometheus(args.metrics_out)
+            jsonl = os.path.splitext(args.metrics_out)[0] + ".jsonl"
+            export.write_jsonl(jsonl, meta={"example": "harden_fleet",
+                                            "scale": SCALE})
+            print(f"wrote {args.metrics_out} + {jsonl}")
+        obs.set_tracer(None)
+        obs.disable()
 
 
 if __name__ == "__main__":

@@ -12,6 +12,9 @@ cloud draw, alongside the analytic closed-form verdicts.
   # 64k-scenario ensemble, sharded over 8 virtual host devices:
   PYTHONPATH=src python examples/temporal_sweep.py --grid-size 65536 \\
       --devices 8
+  # with the observability plane on: Chrome trace (load in Perfetto),
+  # Prometheus + JSONL metric snapshots, SLO burn-rate verdicts
+  PYTHONPATH=src python examples/temporal_sweep.py --trace --metrics-out
 """
 
 import argparse
@@ -19,6 +22,7 @@ import os
 import subprocess
 import sys
 import time
+from contextlib import nullcontext
 
 import numpy as np
 
@@ -39,6 +43,15 @@ def main():
     ap.add_argument("--devices", type=int, default=1,
                     help="virtual host devices to shard the scenario "
                          "axis over (re-executes under XLA_FLAGS)")
+    ap.add_argument("--trace", nargs="?", const="failover_trace.json",
+                    default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(host pipeline phases + a traced event-loop "
+                         "failover); open in https://ui.perfetto.dev")
+    ap.add_argument("--metrics-out", nargs="?", const="metrics.prom",
+                    default=None, metavar="PATH",
+                    help="enable the metrics registry and write a "
+                         "Prometheus snapshot (+ JSONL next to it)")
     args = ap.parse_args()
     if args.devices > 1 and "_TEMPORAL_SWEEP_CHILD" not in os.environ:
         env = dict(os.environ, _TEMPORAL_SWEEP_CHILD="1")
@@ -48,6 +61,19 @@ def main():
         env.setdefault("PYTHONPATH", "src")
         raise SystemExit(subprocess.run(
             [sys.executable, *sys.argv], env=env).returncode)
+
+    tracer, prof = None, None
+    if args.trace or args.metrics_out:
+        from repro import obs
+        from repro.obs.profiler import Profiler
+        obs.enable()
+        if args.trace:
+            tracer = obs.Tracer()
+            obs.set_tracer(tracer)
+        prof = Profiler(tracer)
+
+    def phase(name):
+        return prof.phase(name) if prof is not None else nullcontext()
 
     fs = synthesize_fleet(scale=0.1, seed=7, as_arrays=True,
                           unsafe_chain_fraction=0.02)
@@ -61,7 +87,8 @@ def main():
 
     # 1. the un-remediated fleet: fail-close chains break criticals in
     #    every blackhole scenario, sinking the availability trace
-    res0 = sweep_with_dependency_ensemble(fs, grid=grid, temporal=True)
+    with phase("sweep-unhardened"):
+        res0 = sweep_with_dependency_ensemble(fs, grid=grid, temporal=True)
     print(f"\nbefore hardening: t_sla_ok="
           f"{int(res0['t_sla_ok'].sum())}/{len(res0['t_sla_ok'])} "
           f"worst avail integral "
@@ -70,7 +97,8 @@ def main():
     # 2. harden: greedily fail-open the highest-blast-radius unsafe edges
     #    until the full blackhole certifies (paper's 4,000+ conversions)
     graph = CallGraph.from_fleet_state(fs)
-    plan = plan_hardening(graph)
+    with phase("plan-hardening"):
+        plan = plan_hardening(graph)
     # plan indices are CSR positions; map back to FleetState edge order
     fs.edges.fail_open[graph.input_edge_indices(plan.hardened_edges)] = True
     print(f"hardened {plan.n_hardened} edges in {plan.rounds} rounds "
@@ -79,7 +107,8 @@ def main():
     # 3. the hardened fleet, same temporal ensemble (fused engine path —
     #    warm after step 1 compiled the bucket)
     t0 = time.time()
-    res = sweep_with_dependency_ensemble(fs, grid=grid, temporal=True)
+    with phase("sweep-hardened"):
+        res = sweep_with_dependency_ensemble(fs, grid=grid, temporal=True)
     dt = time.time() - t0
     print(f"fused sweep: {len(res['sla_ok'])} scenarios in {dt:.2f}s "
           f"({len(res['sla_ok'])/dt:,.0f} scenarios/s)")
@@ -124,6 +153,53 @@ def main():
     print(f"  availability integral: "
           f"{res['t_availability_mean'][i]:.5f} (SLA 0.9997) "
           f"temporal_sla_ok={bool(res['t_sla_ok'][i])}")
+
+    if args.trace or args.metrics_out:
+        from repro import obs
+        from repro.core.timeline_sim import config_for_fleet, sweep_timeline
+        from repro.obs import export, slo
+
+        # SLO burn-rate monitor over full per-step availability traces
+        # (multi-window multi-burn-rate against the 99.97% target),
+        # verdict quality judged against the kernel's own avail_ok
+        with phase("slo-monitor"):
+            cfg = config_for_fleet(fs)
+            n_slo = min(args.grid_size, 256)
+            tr = sweep_timeline(cfg, grid=tile_grid(scenario_grid(), n_slo),
+                                return_traces=True)
+            verd = slo.sweep_alerts(tr["trace_availability"], tr["t"])
+            quality = slo.alert_quality(verd["alert"], ~tr["avail_ok"],
+                                        verd["t_first_alert"])
+        print("\n== SLO burn-rate monitor (99.97% target) ==")
+        print(f"  rules: {[r.name for r in slo.DEFAULT_RULES]}")
+        print(f"  alerts on {quality['n_alerts']}/{quality['n_scenarios']} "
+              f"scenarios ({quality['n_violations']} true SLA violations): "
+              f"precision={quality['precision']:.2f} "
+              f"recall={quality['recall']:.2f} "
+              f"median time-to-first-alert="
+              f"{quality['median_t_first_alert']:.0f}s")
+
+        if args.trace:
+            # one traced event-loop failover: the orchestration waves
+            # (BBM evict, burst conversion, MBB/RL waves, cloud grants)
+            # render as sim-time spans alongside the host phases above
+            from repro.core.capacity import RegionCapacity
+            from repro.core.omg import Orchestrator
+            with phase("traced-failover"):
+                orch = Orchestrator(fs, RegionCapacity.for_fleet("tr", fs),
+                                    tracer=tracer)
+                orch.failover()
+            tracer.save(args.trace)
+            print(f"\nwrote {args.trace} ({len(tracer)} events; load in "
+                  f"https://ui.perfetto.dev)")
+        if args.metrics_out:
+            export.write_prometheus(args.metrics_out)
+            jsonl = os.path.splitext(args.metrics_out)[0] + ".jsonl"
+            export.write_jsonl(jsonl, meta={"example": "temporal_sweep",
+                                            "grid_size": args.grid_size})
+            print(f"wrote {args.metrics_out} + {jsonl}")
+        obs.set_tracer(None)
+        obs.disable()
 
 
 if __name__ == "__main__":

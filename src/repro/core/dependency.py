@@ -53,6 +53,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.fleet_state import FleetState
 from repro.core.service import ServiceSpec
 from repro.kernels.backend import use_ufa_kernels as _use_ufa_kernels
@@ -413,12 +414,17 @@ class RuntimeFailCloseDetector:
         the measured-faster fallback.  Both fold into the same int64
         accumulators."""
         n = self.n_edges
+        # one enabled() branch per multi-million-record chunk — free off
+        meter = obs.enabled()
+        t0 = time.perf_counter() if meter else 0.0
         if n and _use_ufa_kernels():
+            backend = "pallas"
             from repro.kernels.ufa.ingest import ingest_hist
             counts = np.asarray(
                 ingest_hist(jnp.asarray(edge_id), jnp.asarray(callee_failed),
                             jnp.asarray(caller_errored), n), np.int64)
         else:
+            backend = "numpy"
             eid = np.asarray(edge_id)
             code = ((np.asarray(callee_failed, np.uint8) << 1)
                     | np.asarray(caller_errored, np.uint8))
@@ -434,6 +440,13 @@ class RuntimeFailCloseDetector:
         # 62T RPCs/week), fail loudly instead
         assert int(self.calls.max(initial=0)) < (1 << 62), \
             "per-edge call count approaching int64 overflow"
+        if meter:
+            dt = time.perf_counter() - t0
+            n_rec = len(np.asarray(edge_id))
+            obs.inc("ufa_ingest_records_total", n_rec, backend=backend)
+            obs.inc("ufa_ingest_batches_total", backend=backend)
+            if dt > 0:
+                obs.set_gauge("ufa_ingest_records_per_s", n_rec / dt)
 
     def ingest(self, records: Iterable[RPCRecord]):
         """Record-object compat: intern edges, then batch-ingest."""
@@ -471,7 +484,12 @@ class RuntimeFailCloseDetector:
             jnp.asarray(self.errors_given_ok.astype(np.float32)),
             self.min_failures, self.propagation_threshold,
             self.lift_threshold)
-        return np.asarray(mask)
+        mask = np.asarray(mask)
+        if obs.enabled():
+            obs.inc("ufa_detect_runs_total")
+            obs.set_gauge("ufa_detect_edges_flagged",
+                          int(np.count_nonzero(mask)))
+        return mask
 
     def detect(self) -> Set[Tuple[str, str]]:
         mask = self.detect_mask()

@@ -47,14 +47,19 @@ def availability_during_failover(fleet: Dict[str, ServiceSpec],
         down = tl.series.get("rl_not_bursted", [0] * len(tl.t))[i]
         rl_down_windows.append((t, down))
 
+    # sample times are nondecreasing and rl_down_windows is time-ascending,
+    # so one merged sweep replaces the per-sample rescan: advance a shared
+    # pointer to the last window at or before t (O(n+m) total, same
+    # last-match semantics as the scan it replaced)
+    n_win = len(rl_down_windows)
+    j = -1
     for i in range(n_samples):
         t = t_end * i / max(1, n_samples - 1)
         avail = BASELINE_AVAILABILITY + rng.gauss(0, 2e-5)
         # fail-close cascade: weight by affected caller cores
-        down_now = 0.0
-        for (tt, down) in rl_down_windows:
-            if tt <= t:
-                down_now = down
+        while j + 1 < n_win and rl_down_windows[j + 1][0] <= t:
+            j += 1
+        down_now = rl_down_windows[j][1] if j >= 0 else 0.0
         if down_now > 0 and unsafe:
             affected = sum(s.cores for s, d in unsafe
                            if fleet.get(d) is not None

@@ -24,6 +24,7 @@ from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro import obs
 from repro.core.capacity import RegionCapacity
 from repro.core.events import EventLoop
 from repro.core.fleet_state import (AM, AO, PLACEMENT_BURST, PLACEMENT_CLOUD,
@@ -174,7 +175,8 @@ class Orchestrator:
                  loop: Optional[EventLoop] = None, scale: float = 1.0,
                  on_evict: Optional[Callable] = None,
                  on_migrate: Optional[Callable] = None,
-                 on_restore: Optional[Callable] = None):
+                 on_restore: Optional[Callable] = None,
+                 tracer=None):
         if isinstance(fleet, FleetState):
             self.fleet: Optional[Dict[str, ServiceSpec]] = None
             self.fs = fleet
@@ -183,6 +185,9 @@ class Orchestrator:
             self.fs = FleetState.from_specs(fleet)
         self.region = region
         self.loop = loop or EventLoop()
+        if tracer is not None:
+            # every scheduled wave/grant/restore becomes a sim-time span
+            self.loop.tracer = tracer
         self.scale = scale
         self.on_evict = on_evict
         self.on_migrate = on_migrate
@@ -335,7 +340,8 @@ class Orchestrator:
         self._snap()
         if mode == "non-peak":
             # only city traffic moves; nothing is preempted
-            self.loop.schedule(self.CITY_WAVE_S * 4, lambda: self._snap())
+            self.loop.schedule(self.CITY_WAVE_S * 4, lambda: self._snap(),
+                               "city-traffic")
             rep.always_on_ok = True
             rep.rl_rto_met = True
             self.loop.run()
@@ -360,6 +366,7 @@ class Orchestrator:
             fs.traffic_enabled[mask] = False
             fs.pool[mask] = POOL_NONE
             self._emit(self.on_evict, mask)
+            obs.inc("ufa_orch_envs_total", int(mask.sum()), action="evicted")
             self.loop.log(f"BBM evicted {int(mask.sum())} preemptible SEs")
             self._snap()
         self.loop.schedule(self.KILL_LATENCY_S, evict_all, "bbm-evict")
@@ -390,7 +397,8 @@ class Orchestrator:
                         restore_rl()
                 return tick
             for i in range(steps):
-                self.loop.schedule(ramp_total * (i + 1) / steps, make_tick(i))
+                self.loop.schedule(ramp_total * (i + 1) / steps, make_tick(i),
+                                   "burst-tick")
         self.loop.schedule(self.BATCH_EVICT_S + self.PREFETCH_S,
                            start_conversion, "burst-conversion")
 
@@ -423,16 +431,19 @@ class Orchestrator:
                     if self.on_migrate is not None:
                         for i in moved:
                             self.on_migrate(self._spec_of(int(i)))
+                    obs.inc("ufa_orch_envs_total", int(len(moved)),
+                            action="migrated")
                     self._snap()
                     if idx + 1 < len(waves):
-                        self.loop.schedule(self.MBB_WAVE_S, run_wave(idx + 1))
+                        self.loop.schedule(self.MBB_WAVE_S, run_wave(idx + 1),
+                                           "mbb-wave")
                     else:
                         rep.am_migrated_at_s = self.loop.now - t0
                         self.loop.log("Active-Migrate migration complete")
                         scale_always_on()
                 return w
             if waves:
-                self.loop.schedule(self.MBB_WAVE_S, run_wave(0))
+                self.loop.schedule(self.MBB_WAVE_S, run_wave(0), "mbb-wave")
             else:
                 rep.am_migrated_at_s = self.loop.now - t0
                 scale_always_on()
@@ -480,6 +491,8 @@ class Orchestrator:
                 if self.on_restore is not None:
                     for i in items:
                         self.on_restore(self._spec_of(int(i)))
+                obs.inc("ufa_orch_envs_total", int(len(items)),
+                        action="restored")
 
             def restore_batch(start):
                 def w():
@@ -532,13 +545,15 @@ class Orchestrator:
                     nxt = start + count
                     if nxt < len(rls) and count > 0:
                         self.loop.schedule(self.RL_RESTORE_WAVE_S,
-                                           restore_batch(nxt))
+                                           restore_batch(nxt),
+                                           "rl-restore-wave")
                     else:
                         self._rl_waves_done = True
                         if self._pending_cloud == 0:
                             finalize_rl()
                 return w
-            self.loop.schedule(self.RL_RESTORE_WAVE_S, restore_batch(0))
+            self.loop.schedule(self.RL_RESTORE_WAVE_S, restore_batch(0),
+                               "rl-restore-wave")
 
         self.loop.run()
         self._snap()
@@ -594,6 +609,8 @@ class Orchestrator:
             self._snap()
 
         self.loop.schedule(self.CITY_WAVE_S * 4, move_back, "traffic-back")
-        self.loop.schedule(self.CITY_WAVE_S * 6, reenable_terminate)
-        self.loop.schedule(self.CITY_WAVE_S * 10, release_resources)
+        self.loop.schedule(self.CITY_WAVE_S * 6, reenable_terminate,
+                           "reenable-terminate")
+        self.loop.schedule(self.CITY_WAVE_S * 10, release_resources,
+                           "release-resources")
         self.loop.run()

@@ -41,6 +41,7 @@ not.
 
 from __future__ import annotations
 
+import time
 from contextlib import nullcontext
 from functools import partial
 from typing import Dict, Optional
@@ -52,6 +53,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core.scenarios import (FleetAggregates, analytic_consts,
                                   scenario_grid, scenario_outcome)
 from repro.core.timeline_sim import (PARAM_KEYS, TimelineConfig,
@@ -286,6 +288,12 @@ class SweepEngine:
         grid = scenario_grid() if grid is None else grid
         n = len(next(iter(grid.values())))
         shape = bucket_shape(n, self.chunk)
+        # one enabled() branch per run() call — free off (and the result
+        # below is host-materialized, so the interior timing is honest)
+        meter = obs.enabled()
+        if meter:
+            t0 = time.perf_counter()
+            variants0 = compiled_variants()
         params = self._params(grid, n, shape)
         use_dep = self.graph is not None and dep_broken_frac is None
         shard = self._shard_for(shape)
@@ -318,6 +326,21 @@ class SweepEngine:
         result = {k: np.asarray(v).reshape(-1, *v.shape[2:])[:n]
                   for k, v in out.items()}
         result.update({k: np.asarray(v) for k, v in grid.items()})
+        if meter:
+            dt = time.perf_counter() - t0
+            variants = compiled_variants()
+            obs.inc("ufa_sweep_runs_total")
+            obs.inc("ufa_sweep_scenarios_total", n)
+            if dt > 0:
+                obs.set_gauge("ufa_sweep_scenarios_per_s", n / dt)
+            obs.observe("ufa_sweep_run_seconds", dt)
+            padded = shape[0] * shape[1]
+            obs.set_gauge("ufa_sweep_padding_waste_ratio",
+                          (padded - n) / padded)
+            obs.set_gauge("ufa_sweep_compiled_variants", variants)
+            if variants > variants0:
+                obs.inc("ufa_sweep_compile_misses_total",
+                        variants - variants0)
         return result
 
 

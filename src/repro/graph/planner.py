@@ -22,6 +22,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro import obs
 from repro.graph.callgraph import CallGraph
 from repro.graph.propagation import (blast_radius, certify, edge_consts,
                                      fixed_point, harden_consts,
@@ -80,10 +81,12 @@ def plan_hardening(graph: CallGraph, batch: int = 64,
         n_bc = int(np.count_nonzero(broken & crit_live))
         trajectory.append({"n_hardened": len(hardened),
                            "n_broken_critical": n_bc})
+        obs.set_gauge("ufa_planner_broken_critical", n_bc)
         if n_bc == 0:
             certified = True
             break
         rounds += 1
+        obs.inc("ufa_planner_rounds_total")
         # frontier: fail-close edges relaying breakage into a live caller
         # (hardening an edge whose caller is itself dark changes nothing)
         frontier = np.flatnonzero(closed & broken[graph.dst]
@@ -99,6 +102,7 @@ def plan_hardening(graph: CallGraph, batch: int = 64,
         w = graph.weight[frontier].astype(np.float64)
         score += w / (w.max() + 1.0)
         pick = frontier[np.argsort(-score, kind="stable")[:batch]]
+        obs.inc("ufa_planner_hardened_edges_total", int(len(pick)))
         hardened.extend(int(i) for i in pick)
         closed[pick] = False
         consts = harden_consts(consts, jnp.asarray(pick))
@@ -147,11 +151,16 @@ def regression_gate(baseline: CallGraph, candidate: CallGraph) -> GateResult:
                    candidate.names[candidate.dst[i]]) not in base_unsafe]
     new_edges = candidate.edge_names(new_idx)
     if not new_idx:
+        obs.inc("ufa_gate_checks_total", verdict="ok")
+        obs.set_gauge("ufa_gate_violations", 0)
         return GateResult(ok=True, new_unsafe_edges=[], violations=[])
     callers = np.unique(candidate.src[np.asarray(new_idx, np.int64)])
     radius = blast_radius(candidate, sources=callers)
     violations = [(c, d, int(radius[candidate.index[c]]))
                   for (c, d) in new_edges
                   if radius[candidate.index[c]] > 0]
+    obs.inc("ufa_gate_checks_total",
+            verdict="ok" if not violations else "fail")
+    obs.set_gauge("ufa_gate_violations", len(violations))
     return GateResult(ok=not violations, new_unsafe_edges=new_edges,
                       violations=violations)
