@@ -51,7 +51,20 @@ class EventLoop:
     def run(self, until: Optional[float] = None,
             max_events: int = 10_000_000) -> int:
         n = 0
-        while self._q and n < max_events:
+        while self._q:
+            if n >= max_events:
+                # fail LOUDLY: a schedule that re-enqueues itself (e.g. a
+                # buggy chaos-storm schedule) used to spin to the cap and
+                # silently return a half-run simulation
+                head_t, _, head_fn, head_label = self._q[0]
+                raise RuntimeError(
+                    f"EventLoop.run exceeded max_events={max_events} at "
+                    f"sim time {self.now:.3f}s with {len(self._q)} events "
+                    f"still queued (next: "
+                    f"{head_label or getattr(head_fn, '__name__', 'event')!r}"
+                    f" at t={head_t:.3f}s) — a schedule is likely "
+                    f"re-enqueueing itself; raise max_events if the "
+                    f"workload is legitimately this large")
             t, seq, fn, label = heapq.heappop(self._q)
             if until is not None and t > until:
                 # re-push with the ORIGINAL seq: a fresh seq would reorder

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import zlib
 from typing import Dict, Optional
 
 import numpy as np
@@ -47,6 +48,23 @@ _PREHEAT_S = Orchestrator.BATCH_EVICT_S + Orchestrator.PREFETCH_S
 _RL_RTO_S = RTO_SECONDS[FailureClass.RESTORE_LATER]
 _QOS_EVICT = QOS_EVICT_UTILIZATION
 _BASE_AVAILABILITY = 0.9997
+
+
+def stage_seed(seed: int, stage: str) -> int:
+    """Derive an independent integer seed for a named pipeline stage from
+    one campaign seed.
+
+    A single chaos-campaign/ensemble ``seed`` parameterizes several
+    random stages (the blackhole draws, the cascade-storm draws, the
+    correlated fault sampler).  Reusing the raw integer for each stage
+    correlates their streams — e.g. the dependency ensemble's uniform
+    draws and the sweep engine's draws used to be the SAME stream.  This
+    folds the crc32 of the stage name into a ``jax.random`` key, so every
+    (seed, stage) pair maps to an independent stream while the whole
+    campaign stays reproducible from the one seed."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed),
+                             zlib.crc32(stage.encode()) & 0x7FFFFFFF)
+    return int(jax.random.randint(key, (), 0, np.iinfo(np.int32).max))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,6 +136,13 @@ def _scenario_outcome(consts: Dict[str, jnp.ndarray], p: Dict[str, jnp.ndarray])
 
     # region sizing (same rule as RegionCapacity.for_fleet, model="ufa")
     stateless = (2.0 * ao + am) * _SLACK
+    # partial-region degradation (chaos fault family): a fraction of the
+    # surviving region's serving capacity is lost — not a binary
+    # blackhole.  Conditional on key presence so legacy grids trace the
+    # identical program; x * (1 - 0) is exact in float32, so a present-
+    # but-zero knob is a bitwise no-op.
+    if "region_degradation" in p:
+        stateless = stateless * (1.0 - p["region_degradation"])
     oc_cap = stateless * (oc - 1.0)
     preempt_resident = (rl + tm) * (1.0 - evict)
     preempt_fit = preempt_resident <= oc_cap + 1e-6
@@ -184,7 +209,19 @@ def _scenario_outcome(consts: Dict[str, jnp.ndarray], p: Dict[str, jnp.ndarray])
     sla_ok = (ao_ok & rl_ok & preempt_fit & dep_ok
               & (am_done_s <= 30.0 * 60.0)
               & (burst_full_s <= 20.0 * 60.0) & util_ok)
-    return {
+    # cascading dependency storm (chaos fault family): the storm's dark
+    # set re-breaks ``storm_broken_frac`` of criticals with pulse
+    # amplitude ``storm_refrac`` while the timeline kernel re-darkens the
+    # restored capacity; the closed-form mirror charges the exposure
+    # once.  Conditional-key + exact-at-zero, like degradation above.
+    if "storm_refrac" in p:
+        storm_frac = p.get("storm_broken_frac", 0.0)
+        storm_exposure = storm_frac * p["storm_refrac"]
+        availability = jnp.clip(availability - 0.5 * storm_exposure,
+                                0.0, 1.0)
+        storm_ok = storm_exposure <= 1e-6
+        sla_ok = sla_ok & storm_ok
+    out = {
         "dep_broken_frac": dep_broken,
         "dep_ok": dep_ok,
         "burst_full_s": burst_full_s,
@@ -201,6 +238,12 @@ def _scenario_outcome(consts: Dict[str, jnp.ndarray], p: Dict[str, jnp.ndarray])
         "availability": availability,
         "sla_ok": sla_ok,
     }
+    if "storm_refrac" in p and "storm_broken_frac" in p:
+        # emitted only when the storm stage supplied a traced verdict (a
+        # vmapped output must not be a trace-time constant)
+        out["storm_ok"] = storm_ok
+        out["storm_broken_frac"] = storm_frac
+    return out
 
 
 # public kernel entry point: the fused sweep engine vmaps this (one
@@ -292,6 +335,12 @@ def sweep_with_dependency_ensemble(fs: FleetState,
     grid = grid if grid is not None else scenario_grid()
     graph = CallGraph.from_fleet_state(fs)
     agg = FleetAggregates.from_fleet_state(fs)
+    # one campaign seed, independent per-stage streams: the ensemble
+    # stage and the fused engine stage used to consume the SAME raw
+    # integer — identical uniform draws, so any analysis comparing the
+    # two paths saw perfectly correlated "independent" ensembles.  Each
+    # stage now folds its name into the campaign seed (``stage_seed``),
+    # keeping the whole run reproducible from the one integer.
     if temporal:
         # the fused engine: propagation + analytic model + timeline scan
         # in ONE jitted, device-parallel pipeline (sweep_engine) — the
@@ -300,10 +349,11 @@ def sweep_with_dependency_ensemble(fs: FleetState,
         from repro.core.sweep_engine import SweepEngine
         from repro.core.timeline_sim import config_for_fleet
         timeline = config_for_fleet(fs, region=region)
-        eng = SweepEngine(agg, timeline, graph=graph, seed=seed, ts=ts)
+        eng = SweepEngine(agg, timeline, graph=graph,
+                          seed=stage_seed(seed, "sweep-engine"), ts=ts)
         return eng.run(grid)
     from repro.graph import blackhole_ensemble
-    ens = blackhole_ensemble(graph, seed=seed,
+    ens = blackhole_ensemble(graph, seed=stage_seed(seed, "blackhole-ensemble"),
                              fractions=np.asarray(grid["evict_fraction"]))
     result = sweep_scenarios(agg, grid,
                              dep_broken_frac=ens["broken_critical_frac"])

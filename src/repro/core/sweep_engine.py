@@ -55,7 +55,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import obs
 from repro.core.scenarios import (FleetAggregates, analytic_consts,
-                                  scenario_grid, scenario_outcome)
+                                  scenario_grid, scenario_outcome,
+                                  stage_seed)
 from repro.core.timeline_sim import (PARAM_KEYS, TimelineConfig,
                                      default_scenario, default_ts,
                                      timeline_verdicts,
@@ -128,26 +129,30 @@ def _run_chunks(consts, pchunks, ts, *, temporal, reducer="scan"):
 
 
 @partial(jax.jit, static_argnames=("temporal", "reducer"),
-         donate_argnums=(2, 3))
-def _run_chunks_dep(consts, dep, pchunks, invchunks, dark_u, ts, *,
-                    temporal, reducer="scan"):
+         donate_argnums=(2, 3, 4))
+def _run_chunks_dep(consts, dep, pchunks, invchunks, storm_invchunks,
+                    dark_u, ts, *, temporal, reducer="scan"):
     """Fused pipeline with the dependency stage in-program: propagate the
     (U, n) unique dark sets to their fixed point (backend-dispatched —
     the Pallas ELL kernel when ``dep`` carries the ELL adjacency), then
     every scenario gathers its broken-critical fraction/counts by
     unique-fraction index — no host materialization between propagation
-    and the availability model."""
+    and the availability model.  ``dark_u`` carries the blackhole uniques
+    AND the cascade-storm uniques (``combined_dark_uniques``): one
+    while_loop settles both stages, and each scenario gathers its storm
+    verdict (``storm_broken_frac``) by its second index."""
     from repro.graph.propagation import broken_critical_fractions
     counts, frac, n_dark = broken_critical_fractions(dark_u, dep)
 
     def one(args):
-        p, inv = args
-        p = dict(p, dep_broken_frac=dist_ctx.hint(frac[inv], "batch"))
+        p, inv, sinv = args
+        p = dict(p, dep_broken_frac=dist_ctx.hint(frac[inv], "batch"),
+                 storm_broken_frac=dist_ctx.hint(frac[sinv], "batch"))
         out = _fused_verdicts_block(consts, p, ts, temporal, reducer)
         out["dep_n_broken_critical"] = counts[inv]
         out["dep_n_dark"] = n_dark[inv]
         return out
-    return lax.map(one, (pchunks, invchunks))
+    return lax.map(one, (pchunks, invchunks, storm_invchunks))
 
 
 def compiled_variants() -> int:
@@ -206,6 +211,10 @@ class SweepEngine:
         if graph is not None:
             from repro.graph.propagation import dep_consts
             self.dep = dep_consts(graph)
+            # the cascade-storm stage draws its dark sets from a stream
+            # independent of the blackhole draws, derived from the one
+            # engine seed (campaign reproducibility without stream reuse)
+            self.storm_seed = stage_seed(seed, "storm")
         # explicit devices force sharding; by default shard only when the
         # grid spills past one chunk — partition overhead loses on small
         # grids (see the README scaling table), and the thin wrappers
@@ -229,8 +238,8 @@ class SweepEngine:
         defaults = default_scenario(burst_delay_s=self._preheat)
         out = {}
         for k in PARAM_KEYS:
-            if k == "dep_broken_frac":
-                continue
+            if k in ("dep_broken_frac", "storm_broken_frac"):
+                continue                    # computed stages, not axes
             col = (np.asarray(grid[k], np.float32) if k in grid
                    else np.full(n, defaults[k], np.float32))
             out[k] = self._chunked(col, shape)
@@ -275,6 +284,20 @@ class SweepEngine:
         return (np.asarray(frac)[inv], np.asarray(counts)[inv],
                 np.asarray(n_dark)[inv])
 
+    def storm_fractions(self, refracs: np.ndarray) -> np.ndarray:
+        """Per-scenario STORM-stage broken-critical fractions as a host
+        array — the composed-path mirror of the in-pipeline cascade-storm
+        stage (same derived ``storm_seed`` stream, same device kernel),
+        for equivalence tests and host-side what-ifs."""
+        from repro.graph.propagation import (broken_critical_fractions,
+                                             shared_blackhole_draws)
+        dark_u, inv = shared_blackhole_draws(self.graph,
+                                             np.asarray(refracs, np.float64),
+                                             seed=self.storm_seed)
+        _, frac, _ = broken_critical_fractions(jnp.asarray(dark_u),
+                                               self.dep)
+        return np.asarray(frac)[inv]
+
     # ------------------------------------------------------------------
     def run(self, grid: Optional[Dict[str, np.ndarray]] = None,
             dep_broken_frac: Optional[np.ndarray] = None,
@@ -303,22 +326,30 @@ class SweepEngine:
               if shard else nullcontext())
         with cm:
             if use_dep:
-                from repro.graph.propagation import shared_blackhole_draws
+                from repro.graph.propagation import combined_dark_uniques
                 fractions = (np.asarray(grid["evict_fraction"])
                              if "evict_fraction" in grid
                              else np.ones(n))
-                dark_u, inv = shared_blackhole_draws(self.graph, fractions,
-                                                     seed=self.seed)
+                storm_fr = (np.asarray(grid["storm_refrac"])
+                            if "storm_refrac" in grid else None)
+                dark_u, inv, storm_inv = combined_dark_uniques(
+                    self.graph, fractions, storm_fr,
+                    seed=self.seed, storm_seed=self.storm_seed)
                 out = _run_chunks_dep(
                     self.consts, self.dep,
                     self._put(params, shard),
                     self._put(self._chunked(inv, shape), shard),
+                    self._put(self._chunked(storm_inv, shape), shard),
                     jnp.asarray(dark_u), self._ts_dev, temporal=temporal,
                     reducer=self.reducer)
             else:
                 frac = (np.zeros(n, np.float32) if dep_broken_frac is None
                         else np.asarray(dep_broken_frac, np.float32))
                 params["dep_broken_frac"] = self._chunked(frac, shape)
+                sfrac = (np.asarray(grid["storm_broken_frac"], np.float32)
+                         if "storm_broken_frac" in grid
+                         else np.zeros(n, np.float32))
+                params["storm_broken_frac"] = self._chunked(sfrac, shape)
                 out = _run_chunks(self.consts, self._put(params, shard),
                                   self._ts_dev, temporal=temporal,
                                   reducer=self.reducer)

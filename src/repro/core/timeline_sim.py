@@ -223,15 +223,28 @@ def config_for_fleet(fleet, region=None) -> TimelineConfig:
 
 PARAM_KEYS = ("traffic_mult", "burst_delay_s", "burst_availability",
               "cloud_quota_frac", "overcommit_factor", "evict_fraction",
-              "dep_broken_frac")
+              "dep_broken_frac",
+              # chaos fault families (repro.chaos): partial-region
+              # degradation + the cascading dependency-storm schedule.
+              # All are exact no-ops at the defaults below, so legacy
+              # grids keep bit-identical verdicts.
+              "region_degradation", "storm_refrac", "storm_t0_s",
+              "storm_period_s", "storm_recover_s", "storm_broken_frac")
 
 
 def default_scenario(**overrides) -> Dict[str, float]:
-    """The paper's operating point (2x traffic, full burst, full quota)."""
+    """The paper's operating point (2x traffic, full burst, full quota).
+
+    The chaos knobs default to "no fault": zero capacity degradation and
+    a storm with zero re-darkening amplitude (``storm_refrac``) — the
+    finite schedule constants are inert until the amplitude is raised."""
     p = {"traffic_mult": 2.0, "burst_delay_s": 270.0,
          "burst_availability": 1.0, "cloud_quota_frac": 1.0,
          "overcommit_factor": 1.5, "evict_fraction": 1.0,
-         "dep_broken_frac": 0.0}
+         "dep_broken_frac": 0.0,
+         "region_degradation": 0.0, "storm_refrac": 0.0,
+         "storm_t0_s": 1800.0, "storm_period_s": 1800.0,
+         "storm_recover_s": 600.0, "storm_broken_frac": 0.0}
     p.update(overrides)
     return p
 
@@ -251,6 +264,13 @@ def _schedule(c: Dict, p: Dict) -> Dict:
     mult = p["traffic_mult"]
     evict = p["evict_fraction"]
 
+    # partial-region degradation: a fraction of the surviving region's
+    # hosts (stateless capacity and physical cores alike) is lost for the
+    # whole horizon.  ``x * (1 - 0)`` is exact in float32, so the default
+    # is a bitwise no-op.
+    cap_scale = 1.0 - p.get("region_degradation", 0.0)
+    stateless_eff = c["stateless_cap"] * cap_scale
+
     burst_cap = c["burst_cap_full"] * p["burst_availability"]
     ramp_total = burst_cap / jnp.maximum(c["spawn_rate"], 1e-9)
     tick_s = ramp_total / 10.0
@@ -264,7 +284,7 @@ def _schedule(c: Dict, p: Dict) -> Dict:
     # steady free once the preemptible spill is evicted and AM released
     am_release_frac = c["am_stateless_cores"] / jnp.maximum(c["am"], 1e-9)
     am_released = am_in_burst * am_release_frac
-    free_at_am_done = (c["stateless_cap"]
+    free_at_am_done = (stateless_eff
                        - (c["steady_used0"] - evict * c["sl_preempt_cores"]
                           - am_released))
     ao_ok = ao_need <= free_at_am_done + 1e-6
@@ -293,6 +313,11 @@ def _schedule(c: Dict, p: Dict) -> Dict:
                     jnp.where(total_cloud > 1e-6, cloud_arrival_t, 0.0)))
 
     return {"burst_cap": burst_cap, "tick_s": tick_s,
+            "cap_scale": cap_scale, "stateless_eff": stateless_eff,
+            "storm_refrac": p.get("storm_refrac", 0.0),
+            "storm_t0": p.get("storm_t0_s", 1800.0),
+            "storm_period": p.get("storm_period_s", 1800.0),
+            "storm_recover": p.get("storm_recover_s", 600.0),
             "burst_full_t": burst_full_t,
             "n_am_waves": n_am_waves, "am_done_t": am_done_t,
             "am_in_burst": am_in_burst,
@@ -304,6 +329,25 @@ def _schedule(c: Dict, p: Dict) -> Dict:
             "total_cloud": total_cloud, "cloud_start_t": cloud_start_t,
             "cloud_arrival_t": cloud_arrival_t,
             "rl_shortfall": rl_shortfall, "rl_done_t": rl_done_t}
+
+
+def _storm_darkness(s: Dict, t):
+    """Cascading-storm re-darkening envelope at time ``t``: from
+    ``storm_t0`` on, a pulse of amplitude ``storm_refrac`` fires every
+    ``storm_period`` seconds and linearly re-restores over
+    ``storm_recover`` seconds — a sawtooth dark mask that re-darkens
+    already-restored capacity mid-timeline (seed failures cascading
+    back).  Identically 0.0 when ``storm_refrac`` is 0 (every factor is
+    finite, so no 0*inf hazard), which keeps default scenarios bitwise
+    unchanged."""
+    k = jnp.clip(jnp.floor((t - s["storm_t0"] + EPS_T)
+                           / jnp.maximum(s["storm_period"], 1e-9)),
+                 0.0, 1e6)
+    since = t - s["storm_t0"] - k * s["storm_period"]
+    env = jnp.clip(1.0 - since / jnp.maximum(s["storm_recover"], 1e-9),
+                   0.0, 1.0)
+    gate = jnp.where(t >= s["storm_t0"] - EPS_T, 1.0, 0.0)
+    return s["storm_refrac"] * env * gate
 
 
 def _instant_core(c: Dict, p: Dict, s: Dict, t) -> Dict:
@@ -341,7 +385,11 @@ def _instant_core(c: Dict, p: Dict, s: Dict, t) -> Dict:
     cloud_live = jnp.minimum(
         jnp.where(t >= s["cloud_arrival_t"] - EPS_T, s["total_cloud"], 0.0),
         cloud_prov)
-    rl_restored = rl_burst + cloud_live
+    # the cascade storm re-darkens a fraction of whatever has been
+    # restored so far (burst conversions and cloud grants alike) — the
+    # time-varying dark mask of a dependency storm, not a new eviction
+    storm_dark = _storm_darkness(s, t)
+    rl_restored = (rl_burst + cloud_live) * (1.0 - storm_dark)
     rl_live = c["rl"] - e * c["rl"] + rl_restored
     tm_live = c["tm"] * (1.0 - e)
 
@@ -354,7 +402,7 @@ def _instant_core(c: Dict, p: Dict, s: Dict, t) -> Dict:
                   + am_steady_cores * _DEMAND_CRIT * mult
                   + pre_steady * _DEMAND_PRE)
     util_model = jnp.minimum(
-        1.0, busy_model / jnp.maximum(c["stateless_cap"], 1.0))
+        1.0, busy_model / jnp.maximum(s["stateless_eff"], 1.0))
 
     # availability: AO shortfall bites from the eviction, overdue RL after
     # the RTO expires, broken criticals (propagation verdict) while their
@@ -370,8 +418,12 @@ def _instant_core(c: Dict, p: Dict, s: Dict, t) -> Dict:
     dark_frac = (rl_down + tm_down) / dark_tot
     dep_pen = 0.5 * p["dep_broken_frac"] * dark_frac
     util_pen = jnp.where(util_model > QOS_EVICT_UTILIZATION, 1e-4, 0.0)
+    # criticals the STORM's dark set breaks (its own propagation verdict)
+    # are down exactly while the storm mask holds capacity dark
+    storm_pen = 0.5 * p.get("storm_broken_frac", 0.0) * storm_dark
     availability = jnp.clip(
-        BASE_AVAILABILITY - ao_pen - rl_pen - dep_pen - util_pen, 0.0, 1.0)
+        BASE_AVAILABILITY - ao_pen - rl_pen - dep_pen - util_pen
+        - storm_pen, 0.0, 1.0)
 
     # per-tier live cores: class live-fraction applied to the tier x class
     # core composition
@@ -427,7 +479,8 @@ def _instant(c: Dict, p: Dict, s: Dict, t) -> Dict:
     busy = (k["ao_live"] * _DEMAND_CRIT * mult
             + k["am_steady_cores"] * _DEMAND_CRIT * mult
             + pre_steady * _DEMAND_PRE)
-    utilization = jnp.minimum(1.0, busy / jnp.maximum(c["phys_cores"], 1.0))
+    utilization = jnp.minimum(
+        1.0, busy / jnp.maximum(c["phys_cores"] * s["cap_scale"], 1.0))
 
     return {"steady_used": steady_used, "overcommit_used": overcommit_used,
             "burst_capacity": burst_capacity, "burst_online": burst_online,
@@ -487,7 +540,7 @@ def _finalize(c: Dict, p: Dict, s: Dict, carry: Dict, ts) -> Dict:
     span = jnp.maximum(ts[-1] - ts[0], 1e-9)
     availability_mean = carry["avail_int"] / span
     time_to_restore = jnp.where(carry["below_seen"], carry["restore_t"], 0.0)
-    oc_cap_s = c["stateless_cap"] * (p["overcommit_factor"] - 1.0)
+    oc_cap_s = s["stateless_eff"] * (p["overcommit_factor"] - 1.0)
     preempt_resident = (c["rl"] + c["tm"]) * (1.0 - p["evict_fraction"])
     preempt_fit = preempt_resident <= oc_cap_s + 1e-6
     dep_ok = p["dep_broken_frac"] <= 0.0
@@ -501,7 +554,7 @@ def _finalize(c: Dict, p: Dict, s: Dict, carry: Dict, ts) -> Dict:
                  + am_stranded * _DEMAND_CRIT * p["traffic_mult"]
                  + preempt_resident * _DEMAND_PRE)
     util_post = jnp.minimum(
-        1.0, busy_post / jnp.maximum(c["stateless_cap"], 1.0))
+        1.0, busy_post / jnp.maximum(s["stateless_eff"], 1.0))
     util_ok = util_post <= QOS_EVICT_UTILIZATION
     rl_rto_met = s["rl_done_t"] <= c["rl_rto_s"] + EPS_T
     sla_ok = (s["ao_ok"] & rl_rto_met & preempt_fit & dep_ok & avail_ok

@@ -206,6 +206,39 @@ def shared_blackhole_draws(graph: CallGraph, fractions: np.ndarray,
     return dark, inverse.astype(np.int32)
 
 
+def combined_dark_uniques(graph: CallGraph, evict_fractions: np.ndarray,
+                          storm_fractions: Optional[np.ndarray],
+                          seed: int, storm_seed: int
+                          ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Unique dark sets for BOTH dependency stages of the fused engine in
+    one propagation batch: the per-scenario blackhole uniques (stream
+    ``seed``) plus — when a cascade storm is active anywhere in the grid
+    — the storm's re-darkening uniques under an INDEPENDENT uniform
+    stream (``storm_seed``; see ``core.scenarios.stage_seed``), appended
+    row-wise so one ``fixed_point`` while_loop settles every dark set.
+    Per-row fixed points are independent and monotone, so concatenating
+    rows never changes any row's verdict.
+
+    Returns ``(dark_u (U, n) bool, inv (S,) int32, storm_inv (S,)
+    int32)`` — scenario ``s`` gathers its blackhole verdict at row
+    ``inv[s]`` and its storm verdict at row ``storm_inv[s]``.  With no
+    storm (``storm_fractions`` None or all zero) a single all-false row
+    is appended and every ``storm_inv`` points at it, so the pipeline
+    keeps one static structure either way."""
+    dark_u, inv = shared_blackhole_draws(graph, evict_fractions, seed=seed)
+    storm_fractions = (None if storm_fractions is None
+                       else np.asarray(storm_fractions, np.float64))
+    if storm_fractions is None or not (storm_fractions > 0.0).any():
+        dark_u = np.concatenate(
+            [dark_u, np.zeros((1, graph.n), bool)])
+        storm_inv = np.full(len(inv), len(dark_u) - 1, np.int32)
+        return dark_u, inv, storm_inv
+    sdark, sinv = shared_blackhole_draws(graph, storm_fractions,
+                                         seed=storm_seed)
+    storm_inv = (sinv + len(dark_u)).astype(np.int32)
+    return np.concatenate([dark_u, sdark]), inv, storm_inv
+
+
 def broken_critical_fractions(dark_u: jnp.ndarray, dep: Dict
                               ) -> tuple[jnp.ndarray, jnp.ndarray,
                                          jnp.ndarray]:

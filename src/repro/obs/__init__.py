@@ -108,6 +108,21 @@ CATALOG: Dict[str, Tuple[str, str, Tuple[str, ...],
     "ufa_slo_scenarios_alerting": (
         "gauge", "scenarios alerting in the latest monitored ensemble",
         (), None),
+    # -- chaos campaigns (chaos/campaign.py, chaos/report.py) -----------
+    "ufa_chaos_rounds_total": (
+        "counter", "chaos-campaign search rounds executed", (), None),
+    "ufa_chaos_evals_total": (
+        "counter", "engine scenario-evaluations submitted by chaos "
+        "campaigns", (), None),
+    "ufa_chaos_rays_localized": (
+        "gauge", "fault-severity rays whose SLA frontier the latest "
+        "campaign localized to tolerance", (), None),
+    "ufa_chaos_frontier_severity": (
+        "gauge", "localized frontier severity of a fault-severity ray "
+        "in the latest campaign", ("ray",), None),
+    "ufa_chaos_speedup_vs_grid": (
+        "gauge", "engine-evaluation savings of the latest campaign vs "
+        "an exhaustive per-ray grid at the same resolution", (), None),
     # -- profiler / bench -----------------------------------------------
     "ufa_phase_seconds": (
         "histogram", "wall time of named pipeline phases", ("phase",),
