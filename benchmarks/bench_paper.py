@@ -275,8 +275,10 @@ def bench_overcommit() -> List[Row]:
     from repro.core.tiers import o_max
 
     us, r = timed(recommend_factor, repeat=1)
+    assert r["safe"], "default config must yield a certified-safe factor"
     derived = (f"o_max={o_max():.2f} recommended={r['recommended']} "
-               f"(paper: O_max=1.66, simulator-recommended 1.5)")
+               f"safe={r['safe']} (paper: O_max=1.66, "
+               f"simulator-recommended 1.5)")
     return [("overcommit_simulator", us, derived)]
 
 
@@ -787,6 +789,83 @@ def bench_chaos_campaign() -> List[Row]:
     ]
 
 
+def bench_capacity_opt() -> List[Row]:
+    """Capacity-optimizer acceptance: on the paper-scale hardened fleet
+    the two-mode search (grad anneal + CEM polish) must come in at
+    <= 1.4x provisioned/steady while the hard engine certifies every
+    scenario of the 48-point ensemble at >= 99.97 % availability, and
+    the soft gradient must agree with central finite differences."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.service import synthesize_fleet
+    from repro.core.timeline_sim import default_ts
+    from repro.graph import CallGraph
+    from repro.graph.planner import plan_hardening
+    from repro.optim import hardening_weights, optimize_capacity
+    from repro.optim.capacity import (DesignBase, _grid_cols,
+                                      certification_grid, make_knobs,
+                                      soft_loss)
+
+    fs = synthesize_fleet(scale=PAPER_SCALE, seed=SEED, as_arrays=True)
+    fs.apply_ufa_target_classes()
+    graph = CallGraph.from_fleet_state(fs)
+    plan = plan_hardening(graph)
+    fs.edges.fail_open[graph.input_edge_indices(plan.hardened_edges)] = True
+
+    us_opt, res = timed(lambda: optimize_capacity(fs, mode="both"),
+                        repeat=1)
+    v = res.verification
+    assert res.improved, (res.start_multiple, res.provisioning_multiple)
+    assert res.provisioning_multiple <= 1.4, res.provisioning_multiple
+    assert v["all_ok"], v
+    assert v["availability_min"] >= 0.9997 - 1e-9, v["availability_min"]
+
+    # gradient spot-check vs central differences (buffer knob, tau=1)
+    base = DesignBase.from_fleet_state(fs).as_arrays()
+    cols = _grid_cols(certification_grid())
+    ts = jnp.asarray(default_ts(), jnp.float32)
+    tau = jnp.asarray(1.0, jnp.float32)
+    pen = jnp.asarray(200.0, jnp.float32)
+    knobs = make_knobs(buffer=0.6, promote=(0.4, 0.3, 0.2),
+                       overcommit=1.4, ramp=0.9, evict_lambda=0.2)
+    g = float(jax.grad(soft_loss)(knobs, base, cols, ts, tau, pen)
+              ["buffer"])
+    eps = 0.05
+    hi = dict(knobs, buffer=knobs["buffer"] + eps)
+    lo = dict(knobs, buffer=knobs["buffer"] - eps)
+    fd = float((soft_loss(hi, base, cols, ts, tau, pen)
+                - soft_loss(lo, base, cols, ts, tau, pen)) / (2 * eps))
+    assert abs(g - fd) <= 0.08 * max(abs(fd), abs(g)), (g, fd)
+
+    us_w, w = timed(lambda: hardening_weights(fs, graph, knobs=res.knobs),
+                    repeat=1)
+    wplan = plan_hardening(graph, service_weights=w)
+    assert wplan.certified
+
+    record_extra("capacity_opt", {
+        "start_multiple": round(res.start_multiple, 4),
+        "optimized_multiple": round(res.provisioning_multiple, 4),
+        "design": {k: (round(float(x), 4) if not getattr(x, "ndim", 0)
+                       else None) for k, x in res.design.items()
+                   if not getattr(x, "ndim", 0)},
+        "n_scenarios": v["n_scenarios"], "all_ok": v["all_ok"],
+        "availability_min": round(v["availability_min"], 6),
+        "grad_vs_fd": {"grad": round(g, 5), "fd": round(fd, 5)},
+        "weighted_plan_edges": len(wplan.hardened_edges),
+        "weighted_plan_certified": wplan.certified,
+    })
+    return [
+        ("capacity_opt", us_opt,
+         f"{res.start_multiple:.2f}x -> {res.provisioning_multiple:.2f}x "
+         f"(assert <=1.4x), {v['n_scenarios']} scenarios hard-certified "
+         f"at min avail {v['availability_min']:.4f}"),
+        ("capacity_hardening_weights", us_w,
+         f"availability-gradient blast-radius weights; weighted plan "
+         f"{len(wplan.hardened_edges)} edges certified={wplan.certified}"),
+    ]
+
+
 ALL = [
     bench_table1_tiers,
     bench_table2_rpc_matrix,
@@ -809,4 +888,5 @@ ALL = [
     bench_timeline_ensemble,
     bench_fused_sweep_scale,
     bench_chaos_campaign,
+    bench_capacity_opt,
 ]

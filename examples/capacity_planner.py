@@ -23,8 +23,12 @@ def main():
         bar = "#" * int(v * 400)
         marker = "  <= recommended" if abs(f - r["recommended"]) < 1e-9 else ""
         print(f"  {f:.2f}   {v:7.4f} {bar}{marker}")
+    if not r["safe"]:
+        print("\nWARNING: no factor on the grid met the violation budget "
+              f"— {r['recommended']}x is the grid floor, NOT certified safe")
     print(f"\nsimulator recommendation: {r['recommended']}x "
-          f"(paper: 1.5x), clamped by O_max={r['o_max']:.2f}")
+          f"(safe={r['safe']}, paper: 1.5x), clamped by "
+          f"O_max={r['o_max']:.2f}")
 
     fleet = synthesize_fleet(scale=0.05, seed=7)
     demand = sum(s.cores for s in fleet.values())

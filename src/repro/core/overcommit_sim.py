@@ -80,22 +80,41 @@ def _grid_violation_rates(cfg: OvercommitSimConfig,
     return jax.vmap(rate)(factors)
 
 
+def factor_grid(grid_lo: float, grid_hi: float,
+                grid_step: float) -> np.ndarray:
+    """Candidate-factor grid with an exact endpoint: ``np.arange(lo,
+    hi + 1e-9, step)`` accumulates float error and drops ``hi`` for many
+    (lo, hi, step) triples (e.g. 1.0..1.3 by 0.1 ends at 1.2000000000000002
+    > 1.3 + 1e-9's predecessor) — rounding a ``linspace`` over the rounded
+    step count keeps every factor and the endpoint exact."""
+    n = max(0, int(round((grid_hi - grid_lo) / grid_step)))
+    return np.round(np.linspace(grid_lo, grid_lo + n * grid_step, n + 1), 9)
+
+
 def recommend_factor(cfg: OvercommitSimConfig = OvercommitSimConfig(),
                      grid_lo: float = 1.0, grid_hi: float = 2.0,
                      grid_step: float = 0.05) -> Dict[str, object]:
     """Sweep the factor grid (one jitted vmap) and pick the largest safe
-    factor, clamped by O_max — an argmax over the safe mask, no host loop."""
-    factors = np.arange(grid_lo, grid_hi + 1e-9, grid_step)
+    factor, clamped by O_max — an argmax over the safe mask, no host loop.
+
+    The result carries an explicit ``safe`` flag: when NO factor on the
+    grid clears the violation budget and the O_max bound, ``recommended``
+    falls back to ``grid_lo`` *without* implying it is safe — callers
+    (the capacity planner example, the overcommit bench) must check
+    ``safe`` before acting on the recommendation."""
+    factors = factor_grid(grid_lo, grid_hi, grid_step)
     rates = np.asarray(_grid_violation_rates(cfg, jnp.asarray(factors)))
     omax = o_max()
     valid = (rates <= cfg.max_violation_rate) & (factors <= omax)
+    safe = bool(valid.any())
     # grid is ascending: the argmax over the reversed mask is the largest
     # safe factor
     best = (float(factors[len(valid) - 1 - int(np.argmax(valid[::-1]))])
-            if valid.any() else grid_lo)
+            if safe else grid_lo)
     return {
         "factors": [round(float(f), 3) for f in factors],
         "violation_rates": [float(r) for r in rates],
         "o_max": omax,
+        "safe": safe,
         "recommended": round(best, 3),
     }

@@ -124,8 +124,17 @@ def operating_point_mask(grid: Dict[str, np.ndarray]) -> np.ndarray:
             & (np.asarray(grid["evict_fraction"]) == 1.0))
 
 
-def _scenario_outcome(consts: Dict[str, jnp.ndarray], p: Dict[str, jnp.ndarray]):
-    """SLA outcome of ONE scenario (all scalars — vmapped over the grid)."""
+def _scenario_outcome(consts: Dict[str, jnp.ndarray],
+                      p: Dict[str, jnp.ndarray], tau=None):
+    """SLA outcome of ONE scenario (all scalars — vmapped over the grid).
+
+    ``tau`` (opt-in soft relaxation, see ``timeline_sim.soft_ge``): the
+    hard boolean verdicts become sigmoid indicators of the signed margins
+    and ``sla_ok`` their product, so ``jax.grad`` flows through the
+    closed-form model — the capacity optimizer's analytic stage.
+    ``tau=None`` (the default) traces the original ops, bit-identical."""
+    from repro.core.timeline_sim import (SOFT_DEP_SCALE, SOFT_FRAC_SCALE,
+                                         SOFT_TIME_SCALE, soft_ge)
     ao, am = consts["ao"], consts["am"]
     rl, tm = consts["rl"], consts["tm"]
     am_envs, rl_envs = consts["am_envs"], consts["rl_envs"]
@@ -133,9 +142,18 @@ def _scenario_outcome(consts: Dict[str, jnp.ndarray], p: Dict[str, jnp.ndarray])
     mult = p["traffic_mult"]
     oc = p["overcommit_factor"]
     evict = p["evict_fraction"]
+    # eviction-order shifts (optim.capacity): per-class deltas on the
+    # evicted fraction, additive so a present-but-zero knob is exact
+    d_rl = p.get("rl_evict_delta", 0.0)
+    d_tm = p.get("tm_evict_delta", 0.0)
+    cs = 0.01 * (ao + am + rl + tm)          # cores-margin scale (soft)
 
-    # region sizing (same rule as RegionCapacity.for_fleet, model="ufa")
-    stateless = (2.0 * ao + am) * _SLACK
+    # region sizing (same rule as RegionCapacity.for_fleet, model="ufa");
+    # the optimizer overrides the hand-tuned 2x Always-On buffer via the
+    # optional ``ao_buffer`` const (1 + buffer fraction) — key-conditional
+    # so legacy consts trace the identical program
+    buf = consts["ao_buffer"] if "ao_buffer" in consts else 2.0
+    stateless = (buf * ao + am) * _SLACK
     # partial-region degradation (chaos fault family): a fraction of the
     # surviving region's serving capacity is lost — not a binary
     # blackhole.  Conditional on key presence so legacy grids trace the
@@ -144,15 +162,23 @@ def _scenario_outcome(consts: Dict[str, jnp.ndarray], p: Dict[str, jnp.ndarray])
     if "region_degradation" in p:
         stateless = stateless * (1.0 - p["region_degradation"])
     oc_cap = stateless * (oc - 1.0)
-    preempt_resident = (rl + tm) * (1.0 - evict)
-    preempt_fit = preempt_resident <= oc_cap + 1e-6
+    preempt_resident = ((rl + tm) * (1.0 - evict)
+                        - (rl * d_rl + tm * d_tm))
+    if tau is None:
+        preempt_fit = preempt_resident <= oc_cap + 1e-6
+    else:
+        preempt_fit = soft_ge(oc_cap + 1e-6, preempt_resident, cs, tau)
 
-    # batch -> burst conversion (same sizing rule as for_fleet)
+    # batch -> burst conversion (same sizing rule as for_fleet); the
+    # optional ``spawn_mult`` const is the optimizer's burst-conversion
+    # ramp knob (spawner throughput multiplier)
     batch_cores = (am + rl) * C.BATCH_BURST_HEADROOM \
         / C.BATCH_PREEMPTIBLE_FRACTION
     burst_cap = (batch_cores * C.BATCH_PREEMPTIBLE_FRACTION
                  * p["burst_availability"])
     spawn_rate = _SPAWN_CORES_PER_HOST_S * batch_cores / _BATCH_CORES_PER_HOST
+    if "spawn_mult" in consts:
+        spawn_rate = spawn_rate * consts["spawn_mult"]
     burst_full_s = p["burst_delay_s"] + burst_cap / jnp.maximum(spawn_rate,
                                                                 1e-9)
 
@@ -166,11 +192,16 @@ def _scenario_outcome(consts: Dict[str, jnp.ndarray], p: Dict[str, jnp.ndarray])
     free_after_am = stateless - ao - am + am_in_burst
     ao_need = ao * (mult - 1.0)
     ao_short = jnp.maximum(0.0, ao_need - free_after_am)
-    ao_ok = ao_short <= 1e-6
+    if tau is None:
+        ao_ok = ao_short <= 1e-6
+    else:
+        # signed margin (ao_short is one-sided: 0 exactly at the boundary
+        # would read 0.5 through the sigmoid)
+        ao_ok = soft_ge(free_after_am + 1e-6, ao_need, cs, tau)
 
     # Restore-Later: burst first, cloud (with provisioning latency) last
     burst_left = jnp.maximum(0.0, burst_cap - am_in_burst)
-    rl_need = rl * evict                      # evicted RL demand to restore
+    rl_need = rl * evict + rl * d_rl          # evicted RL demand to restore
     rl_in_burst = jnp.minimum(rl_need, burst_left)
     cloud_need = rl_need - rl_in_burst
     quota = C.default_cloud_quota(rl) * p["cloud_quota_frac"]
@@ -182,13 +213,24 @@ def _scenario_outcome(consts: Dict[str, jnp.ndarray], p: Dict[str, jnp.ndarray])
     cloud_delay = cloud_grant / cloud_rate
     rl_waves = jnp.ceil(rl_envs / _MBB_PARALLELISM)
     rl_done_s = burst_full_s + rl_waves * _RL_WAVE_S + cloud_delay
-    rl_ok = (rl_down <= 1e-6) & (rl_done_s <= _RL_RTO_S)
+    if tau is None:
+        rl_ok = (rl_down <= 1e-6) & (rl_done_s <= _RL_RTO_S)
+    else:
+        # signed fit margin: quota vs. what must come from the cloud
+        # (rl_down is one-sided, same boundary problem as ao_short); the
+        # +1.0-core shift keeps the fully-served point deep in the "ok"
+        # tail instead of on the 0.5 knife edge
+        rl_ok = (soft_ge(quota + 1.0, cloud_need, cs, tau)
+                 * soft_ge(_RL_RTO_S, rl_done_s, SOFT_TIME_SCALE, tau))
 
     # surviving-region utilization at the post-migration peak
     busy = (ao * mult * 0.62 + am_in_burst * 0.0
             + am_stranded * 0.62 * mult + preempt_resident * 0.35)
     util_peak = busy / jnp.maximum(stateless, 1.0)
-    util_ok = util_peak <= _QOS_EVICT
+    if tau is None:
+        util_ok = util_peak <= _QOS_EVICT
+    else:
+        util_ok = soft_ge(_QOS_EVICT, util_peak, SOFT_FRAC_SCALE, tau)
 
     # availability estimate: AO shortfall bites immediately; unrestored RL
     # degrades the fraction of critical flows that (safely) depend on it;
@@ -198,17 +240,33 @@ def _scenario_outcome(consts: Dict[str, jnp.ndarray], p: Dict[str, jnp.ndarray])
     rl_exposure = 0.1 * rl_down / jnp.maximum(rl, 1.0)
     window_frac = jnp.minimum(1.0, rl_done_s / _RL_RTO_S)
     dep_broken = p["dep_broken_frac"]
-    dep_ok = dep_broken <= 0.0
-    availability = (_BASE_AVAILABILITY
-                    - 0.5 * ao_short / crit
-                    - rl_exposure * window_frac
-                    - 0.5 * dep_broken
-                    - jnp.where(util_ok, 0.0, 1e-4))
-    availability = jnp.clip(availability, 0.0, 1.0)
-
-    sla_ok = (ao_ok & rl_ok & preempt_fit & dep_ok
-              & (am_done_s <= 30.0 * 60.0)
-              & (burst_full_s <= 20.0 * 60.0) & util_ok)
+    if tau is None:
+        dep_ok = dep_broken <= 0.0
+        availability = (_BASE_AVAILABILITY
+                        - 0.5 * ao_short / crit
+                        - rl_exposure * window_frac
+                        - 0.5 * dep_broken
+                        - jnp.where(util_ok, 0.0, 1e-4))
+        availability = jnp.clip(availability, 0.0, 1.0)
+        sla_ok = (ao_ok & rl_ok & preempt_fit & dep_ok
+                  & (am_done_s <= 30.0 * 60.0)
+                  & (burst_full_s <= 20.0 * 60.0) & util_ok)
+    else:
+        # broken-critical fractions are quantized at 1/n_crit (~2e-4 for
+        # paper-scale fleets): a 1e-7 threshold with a 1e-6 scale keeps
+        # "nothing broken" (exactly 0) in the ok tail and the smallest
+        # nonzero fraction firmly refused
+        dep_ok = soft_ge(1e-7, dep_broken, SOFT_DEP_SCALE, tau)
+        availability = (_BASE_AVAILABILITY
+                        - 0.5 * ao_short / crit
+                        - rl_exposure * window_frac
+                        - 0.5 * dep_broken
+                        - 1e-4 * (1.0 - util_ok))
+        availability = jnp.clip(availability, 0.0, 1.0)
+        sla_ok = (ao_ok * rl_ok * preempt_fit * dep_ok
+                  * soft_ge(30.0 * 60.0, am_done_s, SOFT_TIME_SCALE, tau)
+                  * soft_ge(20.0 * 60.0, burst_full_s, SOFT_TIME_SCALE, tau)
+                  * util_ok)
     # cascading dependency storm (chaos fault family): the storm's dark
     # set re-breaks ``storm_broken_frac`` of criticals with pulse
     # amplitude ``storm_refrac`` while the timeline kernel re-darkens the
@@ -219,8 +277,12 @@ def _scenario_outcome(consts: Dict[str, jnp.ndarray], p: Dict[str, jnp.ndarray])
         storm_exposure = storm_frac * p["storm_refrac"]
         availability = jnp.clip(availability - 0.5 * storm_exposure,
                                 0.0, 1.0)
-        storm_ok = storm_exposure <= 1e-6
-        sla_ok = sla_ok & storm_ok
+        if tau is None:
+            storm_ok = storm_exposure <= 1e-6
+            sla_ok = sla_ok & storm_ok
+        else:
+            storm_ok = soft_ge(1e-7, storm_exposure, SOFT_DEP_SCALE, tau)
+            sla_ok = sla_ok * storm_ok
     out = {
         "dep_broken_frac": dep_broken,
         "dep_ok": dep_ok,
@@ -252,16 +314,28 @@ def _scenario_outcome(consts: Dict[str, jnp.ndarray], p: Dict[str, jnp.ndarray])
 scenario_outcome = _scenario_outcome
 
 
-def analytic_consts(agg: FleetAggregates) -> Dict[str, jnp.ndarray]:
+def analytic_consts(agg: FleetAggregates, *, ao_buffer=None,
+                    spawn_mult=None) -> Dict[str, jnp.ndarray]:
     """f32 device constants for ``scenario_outcome`` (precomputed once,
     passed as traced arguments so the jit cache is keyed on shapes, not
-    fleet values)."""
-    return {"ao": jnp.asarray(agg.ao_cores, jnp.float32),
-            "am": jnp.asarray(agg.am_cores, jnp.float32),
-            "rl": jnp.asarray(agg.rl_cores, jnp.float32),
-            "tm": jnp.asarray(agg.tm_cores, jnp.float32),
-            "am_envs": jnp.asarray(agg.am_envs, jnp.float32),
-            "rl_envs": jnp.asarray(agg.rl_envs, jnp.float32)}
+    fleet values).
+
+    ``ao_buffer`` / ``spawn_mult`` (optional floats, the capacity
+    optimizer's hooks): when given, they are added as consts keys and
+    ``scenario_outcome`` replaces the hand-tuned 2x Always-On sizing
+    coefficient / scales the burst spawner throughput.  Absent keys trace
+    the original program — the historical sweeps stay bit-identical."""
+    out = {"ao": jnp.asarray(agg.ao_cores, jnp.float32),
+           "am": jnp.asarray(agg.am_cores, jnp.float32),
+           "rl": jnp.asarray(agg.rl_cores, jnp.float32),
+           "tm": jnp.asarray(agg.tm_cores, jnp.float32),
+           "am_envs": jnp.asarray(agg.am_envs, jnp.float32),
+           "rl_envs": jnp.asarray(agg.rl_envs, jnp.float32)}
+    if ao_buffer is not None:
+        out["ao_buffer"] = jnp.asarray(ao_buffer, jnp.float32)
+    if spawn_mult is not None:
+        out["spawn_mult"] = jnp.asarray(spawn_mult, jnp.float32)
+    return out
 
 
 # compiled once per (grid-shape, consts-structure); reused across sweeps
@@ -287,8 +361,9 @@ def sweep_scenarios(agg: FleetAggregates,
     integral vs 99.97%, peak on-demand cloud draw, temporal SLA) under
     ``t_``-prefixed keys alongside the analytic ones.  ``ts`` overrides
     the default 2h/240-step grid."""
+    from repro.core.timeline_sim import validate_grid
     grid = grid if grid is not None else scenario_grid()
-    n = len(next(iter(grid.values())))
+    n = validate_grid(grid)
     if timeline is not None:
         # one fused, sharded, jitted pipeline: analytic model + timeline
         # scan in a single vmap (the t_-prefixed temporal verdicts come

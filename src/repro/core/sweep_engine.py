@@ -60,7 +60,8 @@ from repro.core.scenarios import (FleetAggregates, analytic_consts,
 from repro.core.timeline_sim import (PARAM_KEYS, TimelineConfig,
                                      default_scenario, default_ts,
                                      timeline_verdicts,
-                                     timeline_verdicts_batch)
+                                     timeline_verdicts_batch,
+                                     validate_grid)
 from repro.dist import ctx as dist_ctx
 from repro.kernels import backend as _kbackend
 
@@ -87,51 +88,60 @@ def bucket_shape(n: int, chunk: int = CHUNK) -> tuple[int, int]:
     return _pow2_ceil(-(-n // chunk)), chunk
 
 
-def _fused_verdicts(consts: Dict, p: Dict, ts, temporal: bool) -> Dict:
+def _fused_verdicts(consts: Dict, p: Dict, ts, temporal: bool,
+                    tau=None) -> Dict:
     """ONE scenario, all stages: the analytic closed-form verdicts plus
     (``temporal``) the ``t_``-prefixed timeline-scan verdicts — the same
-    kernels the standalone sweeps vmap, composed in one trace."""
-    out = dict(scenario_outcome(consts["a"], p))
+    kernels the standalone sweeps vmap, composed in one trace.  ``tau``
+    (a traced f32 scalar, or None) threads the opt-in soft relaxation
+    into both kernels — sigmoid verdict indicators for the capacity
+    optimizer; None traces the historical bit-exact ops."""
+    out = dict(scenario_outcome(consts["a"], p, tau))
     if temporal:
-        tsum = timeline_verdicts(consts["t"], p, ts)
+        tsum = timeline_verdicts(consts["t"], p, ts, tau)
         out.update({f"t_{k}": v for k, v in tsum.items()})
     return out
 
 
 def _fused_verdicts_block(consts: Dict, p: Dict, ts, temporal: bool,
-                          reducer: str) -> Dict:
+                          reducer: str, tau=None) -> Dict:
     """One WIDTH-wide scenario block.  ``reducer="scan"`` vmaps the
     per-scenario fused trace (the historical, bit-exact default path);
     ``reducer="pallas"`` keeps the analytic stage identical but runs the
     timeline carry through the segmented Pallas verdict-reduction kernel
     (``timeline_verdicts_batch``) — exact on every verdict except the
-    float32-tight availability integral."""
-    if reducer == "pallas" and temporal:
+    float32-tight availability integral.  Soft mode (``tau``) always
+    takes the scan path: the Pallas reducer is hard-only."""
+    if reducer == "pallas" and temporal and tau is None:
         out = dict(jax.vmap(
             lambda q: dict(scenario_outcome(consts["a"], q)))(p))
         tsum = timeline_verdicts_batch(consts["t"], p, ts)
         out.update({f"t_{k}": v for k, v in tsum.items()})
         return out
-    return jax.vmap(lambda q: _fused_verdicts(consts, q, ts, temporal))(p)
+    return jax.vmap(
+        lambda q: _fused_verdicts(consts, q, ts, temporal, tau))(p)
 
 
 @partial(jax.jit, static_argnames=("temporal", "reducer"),
          donate_argnums=(1,))
-def _run_chunks(consts, pchunks, ts, *, temporal, reducer="scan"):
+def _run_chunks(consts, pchunks, ts, tau=None, *, temporal,
+                reducer="scan"):
     """Fused pipeline, explicit ``dep_broken_frac``: lax.map over
     ``(n_chunks, width)`` scenario mega-batches of the fused scenario
-    block function."""
+    block function.  ``tau=None`` vs a traced scalar hit different jit
+    cache entries (different pytree structures), so the hard path's
+    compiled program is untouched by soft runs."""
     def one(p):
         p = dict(p, dep_broken_frac=dist_ctx.hint(p["dep_broken_frac"],
                                                   "batch"))
-        return _fused_verdicts_block(consts, p, ts, temporal, reducer)
+        return _fused_verdicts_block(consts, p, ts, temporal, reducer, tau)
     return lax.map(one, pchunks)
 
 
 @partial(jax.jit, static_argnames=("temporal", "reducer"),
          donate_argnums=(2, 3, 4))
 def _run_chunks_dep(consts, dep, pchunks, invchunks, storm_invchunks,
-                    dark_u, ts, *, temporal, reducer="scan"):
+                    dark_u, ts, tau=None, *, temporal, reducer="scan"):
     """Fused pipeline with the dependency stage in-program: propagate the
     (U, n) unique dark sets to their fixed point (backend-dispatched —
     the Pallas ELL kernel when ``dep`` carries the ELL adjacency), then
@@ -148,7 +158,7 @@ def _run_chunks_dep(consts, dep, pchunks, invchunks, storm_invchunks,
         p, inv, sinv = args
         p = dict(p, dep_broken_frac=dist_ctx.hint(frac[inv], "batch"),
                  storm_broken_frac=dist_ctx.hint(frac[sinv], "batch"))
-        out = _fused_verdicts_block(consts, p, ts, temporal, reducer)
+        out = _fused_verdicts_block(consts, p, ts, temporal, reducer, tau)
         out["dep_n_broken_critical"] = counts[inv]
         out["dep_n_dark"] = n_dark[inv]
         return out
@@ -189,6 +199,10 @@ class SweepEngine:
                 backend via ``kernels.backend.use_ufa_kernels()`` —
                 "pallas" on accelerators / ``REPRO_UFA_KERNELS=1``,
                 "scan" on plain CPU
+      analytic_extra  optional kwargs dict forwarded to
+                ``analytic_consts`` (``ao_buffer`` / ``spawn_mult``) —
+                the capacity optimizer's hook for verifying an optimized
+                design through the real hard pipeline
     """
 
     def __init__(self, agg: FleetAggregates, timeline: TimelineConfig, *,
@@ -196,12 +210,14 @@ class SweepEngine:
                  ts: Optional[np.ndarray] = None,
                  chunk: int = CHUNK,
                  devices: Optional[object] = None,
-                 reducer: Optional[str] = None):
+                 reducer: Optional[str] = None,
+                 analytic_extra: Optional[Dict] = None):
         if reducer is None:
             reducer = "pallas" if _kbackend.use_ufa_kernels() else "scan"
         assert reducer in ("scan", "pallas"), reducer
         self.reducer = reducer
-        self.consts = {"a": analytic_consts(agg), "t": timeline.as_consts()}
+        self.consts = {"a": analytic_consts(agg, **(analytic_extra or {})),
+                       "t": timeline.as_consts()}
         self._preheat = timeline.preheat_s
         self.ts = np.asarray(default_ts() if ts is None else ts, np.float64)
         self._ts_dev = jnp.asarray(self.ts, jnp.float32)
@@ -301,15 +317,30 @@ class SweepEngine:
     # ------------------------------------------------------------------
     def run(self, grid: Optional[Dict[str, np.ndarray]] = None,
             dep_broken_frac: Optional[np.ndarray] = None,
-            temporal: bool = True) -> Dict[str, np.ndarray]:
+            temporal: bool = True,
+            soft_tau: Optional[float] = None) -> Dict[str, np.ndarray]:
         """Evaluate every scenario in ``grid`` through the fused pipeline;
         returns the analytic verdicts, the ``t_``-prefixed temporal
         verdicts (unless ``temporal=False``), the grid axes, and — when
         the engine has a graph and no explicit ``dep_broken_frac`` — the
         ``dep_n_broken_critical`` / ``dep_n_dark`` propagation verdicts.
-        """
+
+        The grid is validated up front (``timeline_sim.validate_grid``):
+        unknown axes raise instead of silently sweeping nothing (a
+        misspelled key used to fall back to the operating-point default
+        for every scenario), and empty/zero-length grids raise instead of
+        crashing deep inside the chunker.
+
+        ``soft_tau`` (opt-in): evaluate the SOFT-relaxed pipeline at that
+        temperature — verdict keys come back as sigmoid indicators in
+        [0, 1] (float, not bool).  Forces the scan reducer (the Pallas
+        verdict reduction is hard-only); ``None`` runs the historical
+        bit-exact program."""
         grid = scenario_grid() if grid is None else grid
-        n = len(next(iter(grid.values())))
+        n = validate_grid(grid)
+        tau = (None if soft_tau is None
+               else jnp.asarray(soft_tau, jnp.float32))
+        reducer = self.reducer if tau is None else "scan"
         shape = bucket_shape(n, self.chunk)
         # one enabled() branch per run() call — free off (and the result
         # below is host-materialized, so the interior timing is honest)
@@ -340,8 +371,8 @@ class SweepEngine:
                     self._put(params, shard),
                     self._put(self._chunked(inv, shape), shard),
                     self._put(self._chunked(storm_inv, shape), shard),
-                    jnp.asarray(dark_u), self._ts_dev, temporal=temporal,
-                    reducer=self.reducer)
+                    jnp.asarray(dark_u), self._ts_dev, tau,
+                    temporal=temporal, reducer=reducer)
             else:
                 frac = (np.zeros(n, np.float32) if dep_broken_frac is None
                         else np.asarray(dep_broken_frac, np.float32))
@@ -351,8 +382,8 @@ class SweepEngine:
                          else np.zeros(n, np.float32))
                 params["storm_broken_frac"] = self._chunked(sfrac, shape)
                 out = _run_chunks(self.consts, self._put(params, shard),
-                                  self._ts_dev, temporal=temporal,
-                                  reducer=self.reducer)
+                                  self._ts_dev, tau, temporal=temporal,
+                                  reducer=reducer)
 
         result = {k: np.asarray(v).reshape(-1, *v.shape[2:])[:n]
                   for k, v in out.items()}

@@ -69,6 +69,42 @@ RESTORE_THRESH = 0.999          # tier counts as restored above this frac
 _DEMAND_CRIT = 0.62             # demand per live core, critical classes
 _DEMAND_PRE = 0.35              # demand per live core, preemptible classes
 
+# ---------------------------------------------------------------------------
+# Soft relaxation (opt-in): sigmoid-smoothed SLA indicators
+# ---------------------------------------------------------------------------
+#
+# The capacity optimizer (repro.optim.capacity) differentiates through
+# the fused pipeline, but the SLA verdicts are hard booleans (step
+# functions — zero gradient).  Passing a temperature ``tau`` to
+# ``timeline_verdicts`` / ``scenario_outcome`` replaces every hard
+# comparison with a sigmoid of the *signed margin*, in units of a
+# per-quantity scale times tau, so the verdicts become floats in (0, 1)
+# that tend to the exact booleans as tau -> 0 (an annealing schedule
+# recovers the hard model; pinned by tests/test_capacity_opt.py).
+# ``tau=None`` (the default) traces the ORIGINAL ops — a literal no-op,
+# so the bit-exactness contract of the fused engine is untouched.
+
+SOFT_TIME_SCALE = 60.0          # seconds: deadline margins
+SOFT_FRAC_SCALE = 0.02          # utilization / fraction margins
+SOFT_AVAIL_SCALE = 2.0e-5       # availability-integral margins
+SOFT_CORES_FRAC = 0.01          # cores margins, as a fraction of fleet total
+SOFT_DEP_SCALE = 1e-6           # broken-critical fractions (quantized at
+                                # 1/n_crit, so the pass threshold sits at
+                                # 1e-7 — below one broken service)
+
+
+def soft_ge(x, y, scale, tau):
+    """Soft indicator of ``x >= y``: sigmoid of the margin in units of
+    ``scale * tau``.  Tends to the hard boolean as ``tau -> 0`` (the
+    razor's-edge case ``x == y`` saturates to 0.5 instead of True —
+    measure zero for the continuous margins this is applied to)."""
+    return jax.nn.sigmoid((x - y) / (scale * tau))
+
+
+def _cores_scale(c: Dict):
+    """Cores-margin scale for one fleet: 1% of the class total."""
+    return SOFT_CORES_FRAC * (c["ao"] + c["am"] + c["rl"] + c["tm"])
+
 
 # ---------------------------------------------------------------------------
 # Config extraction — the scan kernel and the Orchestrator consume
@@ -229,7 +265,14 @@ PARAM_KEYS = ("traffic_mult", "burst_delay_s", "burst_availability",
               # All are exact no-ops at the defaults below, so legacy
               # grids keep bit-identical verdicts.
               "region_degradation", "storm_refrac", "storm_t0_s",
-              "storm_period_s", "storm_recover_s", "storm_broken_frac")
+              "storm_period_s", "storm_recover_s", "storm_broken_frac",
+              # eviction-order knobs (repro.optim.capacity): per-class
+              # shifts of the evicted fraction — RL is evicted at
+              # ``evict_fraction + rl_evict_delta``, TM at ``+
+              # tm_evict_delta``.  Budget-conserving orders keep
+              # rl*d_rl + tm*d_tm == 0 (same total cores evicted, a
+              # different mix).  Additive forms, exact no-ops at 0.
+              "rl_evict_delta", "tm_evict_delta")
 
 
 def default_scenario(**overrides) -> Dict[str, float]:
@@ -237,16 +280,49 @@ def default_scenario(**overrides) -> Dict[str, float]:
 
     The chaos knobs default to "no fault": zero capacity degradation and
     a storm with zero re-darkening amplitude (``storm_refrac``) — the
-    finite schedule constants are inert until the amplitude is raised."""
+    finite schedule constants are inert until the amplitude is raised.
+    The eviction-order deltas default to 0: pro-rata class eviction."""
     p = {"traffic_mult": 2.0, "burst_delay_s": 270.0,
          "burst_availability": 1.0, "cloud_quota_frac": 1.0,
          "overcommit_factor": 1.5, "evict_fraction": 1.0,
          "dep_broken_frac": 0.0,
          "region_degradation": 0.0, "storm_refrac": 0.0,
          "storm_t0_s": 1800.0, "storm_period_s": 1800.0,
-         "storm_recover_s": 600.0, "storm_broken_frac": 0.0}
+         "storm_recover_s": 600.0, "storm_broken_frac": 0.0,
+         "rl_evict_delta": 0.0, "tm_evict_delta": 0.0}
     p.update(overrides)
     return p
+
+
+def validate_grid(grid) -> int:
+    """Validate a scenario grid (dict of parallel axis columns) and
+    return the scenario count.
+
+    Raises a labeled ``ValueError`` on the two silent-failure modes that
+    used to pass straight through the sweep paths: an *unknown* key (a
+    typo like ``trafic_mult`` swept nothing — every real axis fell back
+    to its default and the run returned plausible-looking verdicts for
+    the wrong ensemble) and an *empty* grid (crashed deep inside the
+    engine's bucket padding with an obscure reshape error).  Ragged axis
+    lengths are rejected for the same reason."""
+    if not grid:
+        raise ValueError("empty scenario grid: no axes given (pass at "
+                         "least one PARAM_KEYS column, or None for the "
+                         "default grid)")
+    unknown = sorted(set(grid) - set(PARAM_KEYS))
+    if unknown:
+        raise ValueError(
+            f"unknown scenario grid key(s) {unknown}: a misspelled axis "
+            "would silently sweep nothing (defaults would be used "
+            f"instead); valid axes: {sorted(PARAM_KEYS)}")
+    n = len(next(iter(grid.values())))
+    if n == 0:
+        raise ValueError("empty scenario grid: zero-length scenario axes")
+    ragged = {k: len(v) for k, v in grid.items() if len(v) != n}
+    if ragged:
+        raise ValueError(f"ragged scenario grid: axis lengths {ragged} "
+                         f"differ from {n}")
+    return n
 
 
 def default_ts(horizon_s: float = 7200.0, n_steps: int = 240) -> np.ndarray:
@@ -259,8 +335,14 @@ def default_ts(horizon_s: float = 7200.0, n_steps: int = 240) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def _schedule(c: Dict, p: Dict) -> Dict:
-    """Scenario-level event times and capacity splits (scalar, traceable)."""
+def _schedule(c: Dict, p: Dict, tau=None) -> Dict:
+    """Scenario-level event times and capacity splits (scalar, traceable).
+
+    ``tau`` (opt-in): soft-relaxation temperature — the hard feasibility
+    booleans (``ao_ok``) become sigmoid indicators and the infinite
+    ``rl_done_t`` sentinel on a cloud-quota shortfall becomes a smooth
+    finite overrun, so gradients flow; ``None`` traces the original
+    ops."""
     mult = p["traffic_mult"]
     evict = p["evict_fraction"]
 
@@ -287,11 +369,19 @@ def _schedule(c: Dict, p: Dict) -> Dict:
     free_at_am_done = (stateless_eff
                        - (c["steady_used0"] - evict * c["sl_preempt_cores"]
                           - am_released))
-    ao_ok = ao_need <= free_at_am_done + 1e-6
+    if tau is None:
+        ao_ok = ao_need <= free_at_am_done + 1e-6
+    else:
+        ao_ok = soft_ge(free_at_am_done + 1e-6, ao_need, _cores_scale(c),
+                        tau)
     ao_short = jnp.maximum(0.0, ao_need - free_at_am_done)
 
-    rl_need = c["rl"] * evict
-    rl_envs_evicted = c["rl_envs"] * evict
+    # eviction-order deltas shift the per-class evicted fraction (additive
+    # forms: ``x + rl*0.0`` is exact in float32, so default grids keep
+    # bit-identical verdicts)
+    d_rl = p.get("rl_evict_delta", 0.0)
+    rl_need = c["rl"] * evict + c["rl"] * d_rl
+    rl_envs_evicted = c["rl_envs"] * evict + c["rl_envs"] * d_rl
     n_rl_waves = jnp.maximum(
         1.0, jnp.ceil(rl_envs_evicted / c["mbb_parallelism"]))
     rl_last_wave_t = burst_full_t + n_rl_waves * c["rl_wave_s"]
@@ -307,12 +397,29 @@ def _schedule(c: Dict, p: Dict) -> Dict:
     cloud_arrival_t = cloud_start_t + total_cloud / jnp.maximum(
         c["cloud_rate"], 1e-9)
     rl_shortfall = jnp.maximum(0.0, rl_need - burst_free_rl - quota_eff)
-    rl_done_t = jnp.where(
-        rl_shortfall > 1e-6, jnp.inf,
-        jnp.maximum(rl_last_wave_t,
-                    jnp.where(total_cloud > 1e-6, cloud_arrival_t, 0.0)))
+    rl_ok_soft = None
+    if tau is None:
+        rl_done_t = jnp.where(
+            rl_shortfall > 1e-6, jnp.inf,
+            jnp.maximum(rl_last_wave_t,
+                        jnp.where(total_cloud > 1e-6, cloud_arrival_t, 0.0)))
+    else:
+        # smooth relaxation of the infinite-shortfall sentinel: the
+        # beyond-quota remainder provisions at the same cloud rate (a
+        # finite, monotone overrun past the RTO), and the "any cloud at
+        # all" gate softens over ~1 core
+        cloud_gate = soft_ge(total_cloud, 0.5, 0.25, tau)
+        rl_done_t = (jnp.maximum(rl_last_wave_t,
+                                 cloud_gate * cloud_arrival_t)
+                     + rl_shortfall / jnp.maximum(c["cloud_rate"], 1e-2))
+        # the signed no-shortfall margin (the hard verdict gates on
+        # rl_shortfall > 1e-6, whose one-sided max(0, .) has no sign to
+        # smooth) — _finalize folds this into rl_rto_met
+        rl_ok_soft = soft_ge(0.0, rl_need - burst_free_rl - quota_eff,
+                             _cores_scale(c), tau)
 
     return {"burst_cap": burst_cap, "tick_s": tick_s,
+            "rl_ok_soft": rl_ok_soft,
             "cap_scale": cap_scale, "stateless_eff": stateless_eff,
             "storm_refrac": p.get("storm_refrac", 0.0),
             "storm_t0": p.get("storm_t0_s", 1800.0),
@@ -350,16 +457,22 @@ def _storm_darkness(s: Dict, t):
     return s["storm_refrac"] * env * gate
 
 
-def _instant_core(c: Dict, p: Dict, s: Dict, t) -> Dict:
+def _instant_core(c: Dict, p: Dict, s: Dict, t, tau=None) -> Dict:
     """Per-step series the scan *carry* consumes (availability, the
     demand-model utilization, the cloud draw, per-tier live cores) plus
     the intermediates the trace-only extras derive from.  This is the
     summary-only hot path — ``timeline_verdicts`` scans exactly this, the
     trace path layers ``_instant`` on top, so summary outputs are the
-    same ops (hence bit-identical) in both."""
+    same ops (hence bit-identical) in both.  ``tau`` softens the
+    knob-dependent time gates and the QoS penalty step (see
+    ``_schedule``); ``None`` traces the original ops."""
     mult = p["traffic_mult"]
     evicted = (t >= c["kill_s"] - EPS_T)
     e = jnp.where(evicted, p["evict_fraction"], 0.0)
+    # per-class eviction-order shifts, gated like ``e`` (zero before the
+    # kill): additive forms keep default grids bit-identical
+    d_rl_t = jnp.where(evicted, p.get("rl_evict_delta", 0.0), 0.0)
+    d_tm_t = jnp.where(evicted, p.get("tm_evict_delta", 0.0), 0.0)
 
     # Active-Migrate MBB waves into burst
     am_waves_done = jnp.clip(
@@ -371,8 +484,13 @@ def _instant_core(c: Dict, p: Dict, s: Dict, t) -> Dict:
     am_moved = jnp.minimum(am_attempt, s["burst_cap"])
 
     # Always-On in-place upscale at migration completion
-    ao_scaled = s["ao_ok"] & (t >= s["am_done_t"] - EPS_T)
-    ao_live = c["ao"] * jnp.where(ao_scaled, mult, 1.0)
+    if tau is None:
+        ao_scaled = s["ao_ok"] & (t >= s["am_done_t"] - EPS_T)
+        ao_live = c["ao"] * jnp.where(ao_scaled, mult, 1.0)
+    else:
+        ao_scaled = s["ao_ok"] * soft_ge(t, s["am_done_t"] - EPS_T,
+                                         SOFT_TIME_SCALE, tau)
+        ao_live = c["ao"] * (1.0 + ao_scaled * (mult - 1.0))
 
     # Restore-Later waves: burst first, the cloud batch after provisioning
     rl_waves_done = jnp.clip(
@@ -382,22 +500,27 @@ def _instant_core(c: Dict, p: Dict, s: Dict, t) -> Dict:
     rl_burst = jnp.minimum(processed, s["burst_free_rl"])
     cloud_req = processed - rl_burst
     cloud_prov = jnp.minimum(cloud_req, s["quota_eff"])
-    cloud_live = jnp.minimum(
-        jnp.where(t >= s["cloud_arrival_t"] - EPS_T, s["total_cloud"], 0.0),
-        cloud_prov)
+    if tau is None:
+        cloud_arrived = jnp.where(t >= s["cloud_arrival_t"] - EPS_T,
+                                  s["total_cloud"], 0.0)
+    else:
+        cloud_arrived = s["total_cloud"] * soft_ge(
+            t, s["cloud_arrival_t"] - EPS_T, SOFT_TIME_SCALE, tau)
+    cloud_live = jnp.minimum(cloud_arrived, cloud_prov)
     # the cascade storm re-darkens a fraction of whatever has been
     # restored so far (burst conversions and cloud grants alike) — the
     # time-varying dark mask of a dependency storm, not a new eviction
     storm_dark = _storm_darkness(s, t)
     rl_restored = (rl_burst + cloud_live) * (1.0 - storm_dark)
-    rl_live = c["rl"] - e * c["rl"] + rl_restored
-    tm_live = c["tm"] * (1.0 - e)
+    rl_live = c["rl"] - (e + d_rl_t) * c["rl"] + rl_restored
+    tm_live = c["tm"] * (1.0 - e - d_tm_t)
 
     # demand-model utilization (drives the SLA verdict / QoS penalty):
     # Always-On busy is constant — the upscale spreads 2x demand over 2x
     # cores — while unmigrated AM absorbs the multiplier on 1x cores
     am_steady_cores = c["am"] - am_moved
-    pre_steady = (c["rl"] + c["tm"]) * (1.0 - e)
+    pre_steady = ((c["rl"] + c["tm"]) * (1.0 - e)
+                  - (c["rl"] * d_rl_t + c["tm"] * d_tm_t))
     busy_model = (c["ao"] * _DEMAND_CRIT * mult
                   + am_steady_cores * _DEMAND_CRIT * mult
                   + pre_steady * _DEMAND_PRE)
@@ -414,10 +537,15 @@ def _instant_core(c: Dict, p: Dict, s: Dict, t) -> Dict:
     overdue = jnp.where(t > c["rl_rto_s"] + EPS_T, 1.0, 0.0)
     rl_pen = 0.1 * rl_down / jnp.maximum(c["rl"], 1.0) * overdue
     dark_tot = jnp.maximum(
-        s["rl_need"] + p["evict_fraction"] * c["tm"], 1e-9)
+        s["rl_need"] + (p["evict_fraction"]
+                        + p.get("tm_evict_delta", 0.0)) * c["tm"], 1e-9)
     dark_frac = (rl_down + tm_down) / dark_tot
     dep_pen = 0.5 * p["dep_broken_frac"] * dark_frac
-    util_pen = jnp.where(util_model > QOS_EVICT_UTILIZATION, 1e-4, 0.0)
+    if tau is None:
+        util_pen = jnp.where(util_model > QOS_EVICT_UTILIZATION, 1e-4, 0.0)
+    else:
+        util_pen = 1e-4 * soft_ge(util_model, QOS_EVICT_UTILIZATION,
+                                  SOFT_FRAC_SCALE, tau)
     # criticals the STORM's dark set breaks (its own propagation verdict)
     # are down exactly while the storm mask holds capacity dark
     storm_pen = 0.5 * p.get("storm_broken_frac", 0.0) * storm_dark
@@ -465,17 +593,23 @@ def _instant(c: Dict, p: Dict, s: Dict, t) -> Dict:
     overcommit_used = c["overcommit_used0"] - e * c["oc_preempt_cores"]
     burst_used = k["am_moved"] + k["rl_burst"]
 
-    # env-count series (orchestrator snapshot names)
+    # env-count series (orchestrator snapshot names); the eviction-order
+    # deltas shift the per-class counts (additive, exact no-ops at 0)
+    d_rl_t = jnp.where(k["evicted"], p.get("rl_evict_delta", 0.0), 0.0)
+    d_tm_t = jnp.where(k["evicted"], p.get("tm_evict_delta", 0.0), 0.0)
     am_bursted = k["am_envs_moved"]
     am_steady = c["am_envs"] - am_bursted
     rl_bursted = jnp.round(s["rl_envs_evicted"] * k["rl_restored"]
                            / jnp.maximum(s["rl_need"], 1e-9))
-    rl_not_bursted = jnp.round(e * c["rl_envs"]) - rl_bursted
-    rl_t_steady = jnp.round((1.0 - e) * (c["rl_envs"] + c["tm_envs"]))
-    terminated = jnp.round(e * c["tm_envs"])
+    rl_not_bursted = jnp.round((e + d_rl_t) * c["rl_envs"]) - rl_bursted
+    rl_t_steady = jnp.round((1.0 - e) * (c["rl_envs"] + c["tm_envs"])
+                            - (d_rl_t * c["rl_envs"]
+                               + d_tm_t * c["tm_envs"]))
+    terminated = jnp.round((e + d_tm_t) * c["tm_envs"])
 
     # utilization, orchestrator-mirror (traffic multiplier on survivors)
-    pre_steady = (c["rl"] + c["tm"]) * (1.0 - e)
+    pre_steady = ((c["rl"] + c["tm"]) * (1.0 - e)
+                  - (c["rl"] * d_rl_t + c["tm"] * d_tm_t))
     busy = (k["ao_live"] * _DEMAND_CRIT * mult
             + k["am_steady_cores"] * _DEMAND_CRIT * mult
             + pre_steady * _DEMAND_PRE)
@@ -534,17 +668,19 @@ def _carry_step(carry: Dict, core: Dict, t, tier_total) -> Dict:
     }
 
 
-def _finalize(c: Dict, p: Dict, s: Dict, carry: Dict, ts) -> Dict:
+def _finalize(c: Dict, p: Dict, s: Dict, carry: Dict, ts, tau=None) -> Dict:
     """Per-scenario summary/verdicts from the final carry (shared by the
-    trace and summary-only paths — identical ops, identical bits)."""
+    trace and summary-only paths — identical ops, identical bits).
+    ``tau`` replaces the hard verdicts with sigmoid margins and the
+    boolean AND with a product of indicators (see the soft-relaxation
+    block at the top of the module); ``None`` traces the original ops."""
     span = jnp.maximum(ts[-1] - ts[0], 1e-9)
     availability_mean = carry["avail_int"] / span
     time_to_restore = jnp.where(carry["below_seen"], carry["restore_t"], 0.0)
     oc_cap_s = s["stateless_eff"] * (p["overcommit_factor"] - 1.0)
-    preempt_resident = (c["rl"] + c["tm"]) * (1.0 - p["evict_fraction"])
-    preempt_fit = preempt_resident <= oc_cap_s + 1e-6
-    dep_ok = p["dep_broken_frac"] <= 0.0
-    avail_ok = availability_mean >= BASE_AVAILABILITY - AVAIL_SLA_TOL
+    preempt_resident = ((c["rl"] + c["tm"]) * (1.0 - p["evict_fraction"])
+                        - (c["rl"] * p.get("rl_evict_delta", 0.0)
+                           + c["tm"] * p.get("tm_evict_delta", 0.0)))
     # the SLA verdict scores the post-migration steady point (stranded AM
     # only), like the analytic model: the pre-migration transient — 2x
     # traffic on Active-Migrate before burst absorbs it — stays visible in
@@ -555,11 +691,32 @@ def _finalize(c: Dict, p: Dict, s: Dict, carry: Dict, ts) -> Dict:
                  + preempt_resident * _DEMAND_PRE)
     util_post = jnp.minimum(
         1.0, busy_post / jnp.maximum(s["stateless_eff"], 1.0))
-    util_ok = util_post <= QOS_EVICT_UTILIZATION
-    rl_rto_met = s["rl_done_t"] <= c["rl_rto_s"] + EPS_T
-    sla_ok = (s["ao_ok"] & rl_rto_met & preempt_fit & dep_ok & avail_ok
-              & util_ok & (s["am_done_t"] <= 30.0 * 60.0)
-              & (s["burst_full_t"] <= 20.0 * 60.0))
+    if tau is None:
+        preempt_fit = preempt_resident <= oc_cap_s + 1e-6
+        dep_ok = p["dep_broken_frac"] <= 0.0
+        avail_ok = availability_mean >= BASE_AVAILABILITY - AVAIL_SLA_TOL
+        util_ok = util_post <= QOS_EVICT_UTILIZATION
+        rl_rto_met = s["rl_done_t"] <= c["rl_rto_s"] + EPS_T
+        sla_ok = (s["ao_ok"] & rl_rto_met & preempt_fit & dep_ok & avail_ok
+                  & util_ok & (s["am_done_t"] <= 30.0 * 60.0)
+                  & (s["burst_full_t"] <= 20.0 * 60.0))
+    else:
+        cs = _cores_scale(c)
+        preempt_fit = soft_ge(oc_cap_s + 1e-6, preempt_resident, cs, tau)
+        dep_ok = soft_ge(1e-7, p["dep_broken_frac"], SOFT_DEP_SCALE, tau)
+        avail_ok = soft_ge(availability_mean,
+                           BASE_AVAILABILITY - AVAIL_SLA_TOL,
+                           SOFT_AVAIL_SCALE, tau)
+        util_ok = soft_ge(QOS_EVICT_UTILIZATION, util_post,
+                          SOFT_FRAC_SCALE, tau)
+        rl_rto_met = (soft_ge(c["rl_rto_s"] + EPS_T, s["rl_done_t"],
+                              SOFT_TIME_SCALE, tau) * s["rl_ok_soft"])
+        sla_ok = (s["ao_ok"] * rl_rto_met * preempt_fit * dep_ok
+                  * avail_ok * util_ok
+                  * soft_ge(30.0 * 60.0, s["am_done_t"],
+                            SOFT_TIME_SCALE, tau)
+                  * soft_ge(20.0 * 60.0, s["burst_full_t"],
+                            SOFT_TIME_SCALE, tau))
     summary = {
         "burst_full_s": s["burst_full_t"], "am_done_s": s["am_done_t"],
         "rl_done_s": s["rl_done_t"], "rl_rto_met": rl_rto_met,
@@ -622,22 +779,27 @@ def _simulate(c: Dict, p: Dict, ts: jnp.ndarray) -> Tuple[Dict, Dict]:
     return traces, _finalize(c, p, s, carry, ts)
 
 
-def timeline_verdicts(c: Dict, p: Dict, ts: jnp.ndarray) -> Dict:
+def timeline_verdicts(c: Dict, p: Dict, ts: jnp.ndarray, tau=None) -> Dict:
     """Summary-only timeline kernel for ONE scenario (scalar params): the
     same ``lax.scan`` as ``_simulate`` but with no per-step trace outputs,
     so the compiled program never materializes the (T, series) stack —
     the fused sweep engine vmaps this over bucket-padded scenario chunks.
     Summary outputs are op-for-op identical to ``_simulate``'s (pinned by
-    ``tests/test_sweep_engine.py``)."""
-    s = _schedule(c, p)
+    ``tests/test_sweep_engine.py``).
+
+    ``tau`` (opt-in soft relaxation): a traced temperature scalar turns
+    the boolean verdicts into differentiable sigmoid indicators — the
+    capacity optimizer's ``jax.grad`` path; ``tau=None`` (the default)
+    traces the original hard ops, bit-identical to before."""
+    s = _schedule(c, p, tau)
     tier_total = jnp.maximum(c["tier_class"].sum(axis=1), 1e-9)
 
     def body(carry, t):
-        core = _instant_core(c, p, s, t)
+        core = _instant_core(c, p, s, t, tau)
         return _carry_step(carry, core, t, tier_total), None
 
     carry, _ = jax.lax.scan(body, _carry0(ts), ts)
-    return _finalize(c, p, s, carry, ts)
+    return _finalize(c, p, s, carry, ts, tau)
 
 
 _simulate_jit = jax.jit(_simulate)
@@ -687,7 +849,7 @@ def sweep_timeline(cfg: TimelineConfig,
     ``scenarios.sweep_with_dependency_ensemble``)."""
     from repro.core.scenarios import scenario_grid
     grid = scenario_grid() if grid is None else grid
-    n = len(next(iter(grid.values())))
+    n = validate_grid(grid)
     params = {k: jnp.asarray(np.asarray(grid[k]), jnp.float32)
               for k in PARAM_KEYS if k in grid}
     if dep_broken_frac is None:

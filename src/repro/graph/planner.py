@@ -45,7 +45,8 @@ class HardeningPlan:
 
 
 def plan_hardening(graph: CallGraph, batch: int = 64,
-                   max_rounds: int = 10_000) -> HardeningPlan:
+                   max_rounds: int = 10_000,
+                   service_weights=None) -> HardeningPlan:
     """Greedy multi-hop hardening until the fleet certifies.
 
     Each round: propagate the full preemption blackhole; the *frontier* is
@@ -55,6 +56,16 @@ def plan_hardening(graph: CallGraph, batch: int = 64,
     caller stops breaking — with RPC volume as the tie-break, harden the
     top ``batch``, repeat.  Terminates because every round converts >= 1
     fail-close edge and certification needs only finitely many.
+
+    ``service_weights`` (optional (n,) float array) switches the frontier
+    ranking to the *weighted* blast radius: each broken service counts
+    its weight instead of 1.  The capacity optimizer feeds its
+    availability-sensitivity weights here (``repro.optim.capacity
+    .hardening_weights``) so the plan spends its first rounds on the
+    edges whose breakage costs the most availability at the optimized
+    operating point.  Certification and termination are still judged on
+    the unweighted broken-critical count — only the greedy order changes;
+    ``None`` keeps the historical ranking bit-identical.
 
     The greedy loop is dispatch-hoisted: the edge/criticality arrays are
     uploaded to the device once and the two jitted propagation closures
@@ -70,6 +81,8 @@ def plan_hardening(graph: CallGraph, batch: int = 64,
     closed = ~graph.fail_open.copy()           # host mirror of the mask
     consts = edge_consts(graph)                # backend-dispatched kernel
     crit_d = jnp.asarray(graph.critical)
+    weights_d = (None if service_weights is None
+                 else jnp.asarray(np.asarray(service_weights, np.float32)))
     dark_d = jnp.asarray(dark[None, :])
     hardened: List[int] = []
     trajectory: List[Dict[str, int]] = []
@@ -91,10 +104,22 @@ def plan_hardening(graph: CallGraph, batch: int = 64,
         # (hardening an edge whose caller is itself dark changes nothing)
         frontier = np.flatnonzero(closed & broken[graph.dst]
                                   & ~dark[graph.src])
-        assert len(frontier) > 0, "broken criticals without a frontier edge"
+        if len(frontier) == 0:
+            # a bare assert here vanished under ``python -O``, leaving the
+            # loop re-certifying the same stale state until max_rounds —
+            # fail loudly instead (mirrors EventLoop.max_events)
+            raise RuntimeError(
+                "plan_hardening stalled: "
+                f"{n_bc} broken critical service(s) after "
+                f"{len(hardened)} hardened edge(s) but no fail-close "
+                "frontier edge relays the breakage into a live caller — "
+                "the propagation verdicts and the edge mask disagree "
+                "(inconsistent graph state?); hardening cannot make "
+                "progress")
         callers = np.unique(graph.src[frontier])
-        counts = radius_counts(callers, graph.n, consts, crit_d)
-        radius = np.zeros(graph.n, np.int32)
+        counts = radius_counts(callers, graph.n, consts, crit_d,
+                               weights=weights_d)
+        radius = np.zeros(graph.n, counts.dtype)
         radius[callers] = counts
         score = radius[graph.src[frontier]].astype(np.float64)
         # tie-break on traffic volume (normalized to < 1 so it never

@@ -91,6 +91,19 @@ def _radius_kernel(dark: jnp.ndarray, consts: Dict[str, jnp.ndarray],
     return (broken & crit[None, :]).sum(axis=1).astype(jnp.int32)
 
 
+@jax.jit
+def _weighted_radius_kernel(dark: jnp.ndarray,
+                            consts: Dict[str, jnp.ndarray],
+                            weights: jnp.ndarray):
+    """Weighted blast radius: same fixed point, but each broken service
+    contributes its (f32) weight instead of 1 — the capacity optimizer's
+    availability-sensitivity weights turn the planner's edge ranking into
+    a blast-*impact* ranking (weights are expected to already encode
+    criticality, e.g. zero on non-critical services)."""
+    broken, _ = fixed_point(dark, consts)
+    return (broken * weights[None, :]).sum(axis=1).astype(jnp.float32)
+
+
 def fixed_point(dark: jnp.ndarray, consts: Dict[str, jnp.ndarray]):
     """Backend-dispatched batched fixed point: the ELL Pallas kernel when
     ``consts`` carries the ELL adjacency (see ``edge_consts``), the XLA
@@ -154,15 +167,21 @@ def harden_consts(consts: Dict[str, jnp.ndarray],
 
 
 def radius_counts(sources: np.ndarray, n: int,
-                  consts: Dict[str, jnp.ndarray], crit_d) -> np.ndarray:
+                  consts: Dict[str, jnp.ndarray], crit_d,
+                  weights=None) -> np.ndarray:
     """Blast-radius counts for ``sources`` against device-resident edge
     consts (``edge_consts``) — the reusable closure the hardening planner
     calls once per greedy round (the device arrays are uploaded once, not
     per call).  Sources are swept in bucket-padded batches (multiples of
     _BUCKET up to _CHUNK) through the jitted kernel; returns counts
-    aligned with ``sources``."""
+    aligned with ``sources``.
+
+    ``weights`` (optional, device-resident (n,) f32): rank by *weighted*
+    blast radius — the sum of per-service weights over the broken set —
+    instead of the unweighted broken-critical count.  ``None`` keeps the
+    historical integer counts bit-identical."""
     sources = np.asarray(sources, np.int64)
-    out = np.zeros(len(sources), np.int32)
+    out = np.zeros(len(sources), np.int32 if weights is None else np.float32)
     for lo in range(0, len(sources), _CHUNK):
         chunk = sources[lo:lo + _CHUNK]
         width = min(_CHUNK, _BUCKET * -(-len(chunk) // _BUCKET))
@@ -170,7 +189,11 @@ def radius_counts(sources: np.ndarray, n: int,
         pad[:len(chunk)] = chunk
         dark = np.zeros((width, n), bool)
         dark[np.arange(width), pad] = True
-        counts = _radius_kernel(jnp.asarray(dark), consts, crit_d)
+        if weights is None:
+            counts = _radius_kernel(jnp.asarray(dark), consts, crit_d)
+        else:
+            counts = _weighted_radius_kernel(jnp.asarray(dark), consts,
+                                             weights)
         out[lo:lo + len(chunk)] = np.asarray(counts)[:len(chunk)]
     return out
 

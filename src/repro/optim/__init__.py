@@ -6,3 +6,18 @@ from repro.optim.adamw import (  # noqa: F401
     cosine_schedule,
     make_optimizer,
 )
+from repro.optim.capacity import (  # noqa: F401
+    CapacityOptResult,
+    DesignBase,
+    certification_grid,
+    design_consts,
+    eviction_deltas,
+    hardening_weights,
+    knob_design,
+    legacy_knobs,
+    make_knobs,
+    optimize_capacity,
+    soft_loss,
+    ufa_knobs,
+    verify_design,
+)
