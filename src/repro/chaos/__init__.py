@@ -17,15 +17,16 @@ seed via ``core.scenarios.stage_seed``.
 """
 
 from .campaign import Campaign, Ray, campaign_for_fleet, default_rays
-from .faults import (FAMILIES, FAULT_LIBRARY, FaultFamily,
-                     correlation_matrix, sample_faults, severity_grid)
+from .faults import (FAMILIES, FAULT_LIBRARY, REQUEST_FAMILIES,
+                     FaultFamily, correlation_matrix, sample_faults,
+                     severity_grid)
 from .report import CampaignReport, RayResult, verify_report
 from .topology import RegionTopology, expand_failures, reduce_pattern_verdicts
 
 __all__ = [
     "Campaign", "Ray", "campaign_for_fleet", "default_rays",
-    "FAMILIES", "FAULT_LIBRARY", "FaultFamily", "correlation_matrix",
-    "sample_faults", "severity_grid",
+    "FAMILIES", "FAULT_LIBRARY", "REQUEST_FAMILIES", "FaultFamily",
+    "correlation_matrix", "sample_faults", "severity_grid",
     "CampaignReport", "RayResult", "verify_report",
     "RegionTopology", "expand_failures", "reduce_pattern_verdicts",
 ]

@@ -41,6 +41,8 @@ __all__ = ["Ray", "default_rays", "Campaign", "engine_oracle",
 VERDICT_KEYS: Tuple[str, ...] = (
     "sla_ok", "t_sla_ok", "availability", "t_availability_mean",
     "rl_done_s", "t_rl_done_s", "util_peak", "t_util_peak",
+    # request-plane drill oracles (serving.workload.drill_oracle)
+    "crit_availability", "crit_p99_s", "pre_restore_s",
 )
 
 
@@ -138,14 +140,20 @@ class Campaign:
     def __init__(self, engine=None, *, rays: Optional[Sequence[Ray]] = None,
                  tol: float = 1.0 / 256.0, round_budget: Optional[int] = None,
                  max_rounds: int = 64, temporal: bool = True, seed: int = 0,
-                 oracle: Optional[Callable] = None, profiler=None):
+                 oracle: Optional[Callable] = None, profiler=None,
+                 families: Optional[Sequence[str]] = None):
         if oracle is None and engine is None:
             raise ValueError("need an engine or an oracle")
         if not 0.0 < tol < 1.0:
             raise ValueError(f"tol must be in (0, 1), got {tol}")
         self.engine = engine            # for report re-verification
         self.oracle = oracle or engine_oracle(engine, temporal=temporal)
-        self.rays = tuple(rays if rays is not None else default_rays())
+        # severity-space axes: engine campaigns stay on the engine-knob
+        # FAMILIES; drill campaigns pass faults.REQUEST_FAMILIES so only
+        # request-plane knobs reach their oracle
+        self.families = tuple(families) if families is not None else FAMILIES
+        self.rays = tuple(rays if rays is not None
+                          else default_rays(self.families))
         if not self.rays:
             raise ValueError("campaign needs at least one ray")
         self.tol = float(tol)
@@ -160,10 +168,11 @@ class Campaign:
     # -- one fused engine batch for a list of (ray_index, severity) ---------
     def _grid_for(self, probes: Sequence[Tuple[int, float]]
                   ) -> Dict[str, np.ndarray]:
-        sev = np.zeros((len(probes), len(FAMILIES)), np.float64)
+        sev = np.zeros((len(probes), len(self.families)), np.float64)
         for i, (ri, s) in enumerate(probes):
-            sev[i] = ray_severities(self.rays[ri].direction, [s])[0]
-        grid = severity_grid(sev)
+            sev[i] = ray_severities(self.rays[ri].direction, [s],
+                                    self.families)[0]
+        grid = severity_grid(sev, self.families)
         for i, (ri, _) in enumerate(probes):
             for knob, val in self.rays[ri].fixed.items():
                 if knob not in grid:
@@ -258,15 +267,16 @@ class Campaign:
                 # (severity 1.0 failed in the probe round, and hi only
                 # ever moves to a severity the oracle rejected) — the
                 # knob values at hi are the minimal known counterexample
-                sev = ray_severities(st.ray.direction, [st.hi])
+                sev = ray_severities(st.ray.direction, [st.hi],
+                                     self.families)
                 counterexample = {
                     k: float(v[0])
-                    for k, v in severity_grid(sev).items()}
+                    for k, v in severity_grid(sev, self.families).items()}
             results.append(RayResult(
                 name=st.ray.name, direction=dict(st.ray.direction),
                 status=st.status, lo=st.lo, hi=st.hi,
                 frontier_severity=frontier, counterexample=counterexample,
-                n_probes=st.n_probes))
+                n_probes=st.n_probes, families=self.families))
         grid_points_per_ray = int(math.ceil(1.0 / self.tol)) + 1
         searched = [r for r in results
                     if r.status in ("localized", "no_violation")]

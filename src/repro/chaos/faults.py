@@ -25,9 +25,9 @@ import numpy as np
 from repro.core.scenarios import stage_seed
 
 __all__ = [
-    "FaultFamily", "FAULT_LIBRARY", "FAMILIES", "severity_grid",
-    "ray_severities", "DEFAULT_CORR_PAIRS", "correlation_matrix",
-    "sample_faults",
+    "FaultFamily", "FAULT_LIBRARY", "FAMILIES", "REQUEST_FAULT_LIBRARY",
+    "REQUEST_FAMILIES", "severity_grid", "ray_severities",
+    "DEFAULT_CORR_PAIRS", "correlation_matrix", "sample_faults",
 ]
 
 
@@ -82,7 +82,27 @@ FAULT_LIBRARY: Dict[str, FaultFamily] = {
 }
 
 # Canonical ordering — the column order of every severity matrix.
+# Deliberately frozen to the ENGINE families above (before the
+# request-plane families register below): ``severity_grid(..., FAMILIES)``
+# must only emit knobs the sweep engine's ``validate_grid`` accepts.
 FAMILIES: Tuple[str, ...] = tuple(FAULT_LIBRARY)
+
+# Request-plane fault families (serving.workload drills): severities map
+# onto workload knobs, not engine scenario knobs — campaigns over these
+# pass ``families=REQUEST_FAMILIES`` and a drill oracle instead of a
+# SweepEngine.  Registered in FAULT_LIBRARY so ``Ray`` validates them.
+REQUEST_FAULT_LIBRARY: Dict[str, FaultFamily] = {
+    f.name: f for f in (
+        FaultFamily(
+            "arrival_spike", "arrival_mult", 1.0, 8.0,
+            "open-loop arrival-rate multiplier beyond the absorbed 2.0x"),
+        FaultFamily(
+            "retry_storm", "retry_storm", 0.0, 1.0,
+            "speculative client-duplicate amplification per arrival"),
+    )
+}
+FAULT_LIBRARY.update(REQUEST_FAULT_LIBRARY)
+REQUEST_FAMILIES: Tuple[str, ...] = tuple(REQUEST_FAULT_LIBRARY)
 
 
 def severity_grid(severity, families: Sequence[str] = FAMILIES

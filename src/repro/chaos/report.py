@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -34,14 +34,17 @@ class RayResult:
     frontier_severity: Optional[float]   # (lo+hi)/2 when localized
     counterexample: Optional[Dict[str, float]]  # knob values at hi
     n_probes: int
+    # severity-space axes the campaign searched (None: engine FAMILIES)
+    families: Optional[Tuple[str, ...]] = None
 
     def frontier_knobs(self) -> Optional[Dict[str, float]]:
         """Frontier severity mapped onto scenario-knob coordinates."""
         if self.frontier_severity is None:
             return None
-        from .faults import ray_severities, severity_grid
-        sev = ray_severities(self.direction, [self.frontier_severity])
-        return {k: float(v[0]) for k, v in severity_grid(sev).items()}
+        from .faults import FAMILIES, ray_severities, severity_grid
+        fams = tuple(self.families) if self.families else FAMILIES
+        sev = ray_severities(self.direction, [self.frontier_severity], fams)
+        return {k: float(v[0]) for k, v in severity_grid(sev, fams).items()}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,27 +123,41 @@ def _base_knob(knob: str) -> float:
     return float("nan")
 
 
-def verify_report(report: CampaignReport, engine, *, temporal: bool = True
-                  ) -> dict:
-    """Replay every logged probe through ``engine`` and compare bitwise.
+def verify_report(report: CampaignReport, engine=None, *,
+                  temporal: bool = True,
+                  oracle: Optional[Callable] = None) -> dict:
+    """Replay every logged probe through ``engine`` (or a campaign
+    ``oracle``) and compare bitwise.
 
     ``engine`` must be built with the same fleet/graph and stage seeds
     (e.g. a second ``campaign_for_fleet(...).oracle`` engine from the
     same campaign seed).  All probes are resubmitted as ONE batch — row
     results must be bit-identical regardless of the batch composition
-    they were originally evaluated in, because every row is vmapped
-    independently.
+    they were originally evaluated in, because every engine row is
+    vmapped independently and every drill-oracle row is an independent
+    deterministic drill.
+
+    ``oracle`` replays campaigns that never had an engine (request-plane
+    drill campaigns): it receives the replayed grid and must return
+    ``(ok, result)`` like the original oracle did.
 
     Returns ``{"n_probes", "mismatches"}`` and raises ``AssertionError``
     on any verdict drift.
     """
+    if engine is None and oracle is None:
+        raise ValueError("verify_report needs an engine or an oracle")
     probes = report.probe_log
     if not probes:
         return {"n_probes": 0, "mismatches": []}
     row_keys = list(probes[0]["row"])
     grid = {k: np.asarray([p["row"][k] for p in probes], np.float64)
             for k in row_keys}
-    res = engine.run(grid, temporal=temporal)
+    if oracle is not None:
+        ok_replayed, res = oracle(grid)
+        ok_replayed = np.asarray(ok_replayed, bool)
+    else:
+        res = engine.run(grid, temporal=temporal)
+        ok_replayed = None
 
     mismatches = []
     verdict_keys = list(probes[0]["verdict"])
@@ -155,9 +172,12 @@ def verify_report(report: CampaignReport, engine, *, temporal: bool = True
                     "probe": int(i), "key": k, "ray": probes[i]["ray"],
                     "severity": probes[i]["severity"],
                     "logged": want[i].item(), "replayed": got[i].item()})
-    ok = np.asarray(res["sla_ok"], bool)[: len(probes)]
-    if "t_sla_ok" in res:
-        ok = ok & np.asarray(res["t_sla_ok"], bool)[: len(probes)]
+    if ok_replayed is not None:
+        ok = ok_replayed[: len(probes)]
+    else:
+        ok = np.asarray(res["sla_ok"], bool)[: len(probes)]
+        if "t_sla_ok" in res:
+            ok = ok & np.asarray(res["t_sla_ok"], bool)[: len(probes)]
     for i, p in enumerate(probes):
         if bool(ok[i]) != p["ok"]:
             mismatches.append({

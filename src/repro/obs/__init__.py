@@ -123,6 +123,24 @@ CATALOG: Dict[str, Tuple[str, str, Tuple[str, ...],
     "ufa_chaos_speedup_vs_grid": (
         "gauge", "engine-evaluation savings of the latest campaign vs "
         "an exhaustive per-ray grid at the same resolution", (), None),
+    # -- serving plane (serving/scheduler.py, serving/failover.py,
+    #    serving/workload.py) ---------------------------------------------
+    "ufa_serving_requests_total": (
+        "counter", "request-plane final verdicts by tier and outcome",
+        ("tier", "outcome"), None),
+    "ufa_serving_retries_total": (
+        "counter", "bounded request retries scheduled (backoff + jitter)",
+        ("tier",), None),
+    "ufa_serving_request_latency_s": (
+        "histogram", "end-to-end request latency in simulated seconds",
+        ("tier",), (1.0, 5.0, 15.0, 30.0, 60.0, 120.0, 300.0, 600.0,
+                    1800.0, 3600.0)),
+    "ufa_serving_replicas_active": (
+        "gauge", "replica target actuated by the failover bridge",
+        ("tier",), None),
+    "ufa_serving_queue_depth": (
+        "gauge", "scheduler queue depth at the latest drill step",
+        ("tier",), None),
     # -- profiler / bench -----------------------------------------------
     "ufa_phase_seconds": (
         "histogram", "wall time of named pipeline phases", ("phase",),

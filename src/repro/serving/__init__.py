@@ -1,2 +1,8 @@
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
-from repro.serving.scheduler import TieredScheduler  # noqa: F401
+from repro.serving.scheduler import (TieredScheduler,  # noqa: F401
+                                     TierPolicy, default_policies)
+from repro.serving.failover import (FailoverBridge,  # noqa: F401
+                                    ReplicaGroup, tier_live_fractions)
+from repro.serving.workload import (DrillReport, DrillSpec,  # noqa: F401
+                                    TierVerdict, drill_oracle,
+                                    request_campaign, run_drill)

@@ -10,15 +10,21 @@ point).  The engine exposes exactly the hooks the UFA layer drives:
   - ``preempt()``: drop the running wave (Restore-Later semantics) and
     return its requests; KV caches are disposable on preemption, requests
     re-prefill after restore (stateless-service assumption, DESIGN.md §2).
-  - per-tier served/rejected/preempted counters -> availability accounting.
+  - ``active``: replica liveness — ``serving.failover.FailoverBridge``
+    toggles it from the timeline kernel's per-tier capacity traces, so a
+    full-peak failover evicts/restores actual inference replicas.
+  - per-tier served/rejected/preempted/restored counters -> availability
+    accounting with the §4.2 differentiated-SLA semantics: a preempted
+    request counts against its own (preemptible) tier's SLA until it is
+    requeued after restoration.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
+import functools
 from collections import defaultdict
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Set
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +34,15 @@ from repro.models import (LMConfig, DecodeState, decode_step,
                           init_decode_state)
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_step(cfg: LMConfig):
+    """One compiled decode step per ``LMConfig`` — shared by every engine
+    built on the same config, so a multi-replica pool (the failover drill
+    runs 6+) compiles each (batch,) shape once, not once per replica."""
+    return jax.jit(lambda p, st, tok: decode_step(p, cfg, st, tok),
+                   donate_argnums=(1,))
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -35,35 +50,50 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 16
     output: List[int] = dataclasses.field(default_factory=list)
-    state: str = "queued"     # queued|running|done|rejected|preempted
+    state: str = "queued"  # queued|running|done|rejected|preempted|failed
+    # request-plane hardening fields (stamped by TieredScheduler.submit;
+    # None means "scheduler fills from its clock / tier policy")
+    t_arrival: Optional[float] = None
+    deadline_s: Optional[float] = None
+    attempts: int = 0                 # retry attempts consumed
+    t_finish: Optional[float] = None  # sim time of the final verdict
+    fail_reason: str = ""             # rejected|shed|deadline|retry_exhausted
 
 
 class ServingEngine:
     def __init__(self, cfg: LMConfig, params, max_batch: int = 8,
-                 max_seq: int = 256, cache_dtype=jnp.float32):
+                 max_seq: int = 256, cache_dtype=jnp.float32,
+                 serves: Optional[Set[Tier]] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.cache_dtype = cache_dtype
+        self.serves = set(serves) if serves is not None else None
+        self.active = True            # replica liveness (FailoverBridge)
         self.blocked_tiers: Set[Tier] = set()
         self.counters: Dict[str, Dict[Tier, int]] = {
-            k: defaultdict(int) for k in ("served", "rejected", "preempted")}
+            k: defaultdict(int)
+            for k in ("served", "rejected", "preempted", "restored")}
         self.wave: List[Request] = []
         self._state: Optional[DecodeState] = None
-        self._step = jax.jit(
-            lambda p, st, tok: decode_step(p, cfg, st, tok),
-            donate_argnums=(1,))
+        self._step = _jitted_step(cfg)
         self.tokens_decoded = 0
 
     # ------------------------------------------------------------------
+    def can_serve(self, tier: Tier) -> bool:
+        return self.active and (self.serves is None or tier in self.serves)
+
     def admit(self, reqs: List[Request]) -> List[Request]:
         """Admission control: refuse blocked tiers, fill up to max_batch
         with equal-length prompts, highest criticality first."""
+        if not self.active:
+            return []                 # deactivated replica: leave queued
         accepted: List[Request] = []
         for r in sorted(reqs, key=lambda r: r.tier):
             if r.tier in self.blocked_tiers:
                 r.state = "rejected"
+                r.fail_reason = "rejected"
                 self.counters["rejected"][r.tier] += 1
                 continue
             if len(accepted) >= self.max_batch:
@@ -81,6 +111,7 @@ class ServingEngine:
         self.wave = reqs
         for r in reqs:
             r.state = "running"
+            r.output = []   # re-prefill after preemption: outputs restart
         B = len(reqs)
         self._state = init_decode_state(self.cfg, B, self.max_seq,
                                         self.cache_dtype)
@@ -92,9 +123,9 @@ class ServingEngine:
         self._last_logits = logits
 
     # ------------------------------------------------------------------
-    def decode_round(self) -> bool:
+    def decode_round(self, now: Optional[float] = None) -> bool:
         """One greedy decode step for the running wave.  Returns True while
-        the wave still has work."""
+        the wave still has work.  ``now`` (sim time) stamps completions."""
         if not self.wave:
             return False
         next_tok = jnp.argmax(self._last_logits, axis=-1).astype(jnp.int32)
@@ -105,6 +136,8 @@ class ServingEngine:
         if done or int(self._state.length) >= self.max_seq - 1:
             for r in self.wave:
                 r.state = "done"
+                if now is not None:
+                    r.t_finish = float(now)
                 self.counters["served"][r.tier] += 1
             self.wave = []
             self._state = None
@@ -132,7 +165,29 @@ class ServingEngine:
         self._state = None
         return dropped
 
+    def restored_credit(self, req: Request):
+        """A request this engine preempted has been requeued post-restore:
+        it stops counting against this engine's availability (the request
+        is back in flight, its final verdict lands wherever it completes)."""
+        self.counters["restored"][req.tier] += 1
+
+    def reset(self):
+        """Back to a fresh steady state (pooled engines across drills)."""
+        self.blocked_tiers = set()
+        self.active = True
+        self.counters = {
+            k: defaultdict(int)
+            for k in ("served", "rejected", "preempted", "restored")}
+        self.wave = []
+        self._state = None
+        self.tokens_decoded = 0
+
     def availability(self, tier: Tier) -> float:
+        """Per-tier request availability with §4.2 differentiated-SLA
+        semantics: preempted-and-never-restored requests count against
+        the (preemptible) tier they belong to."""
         s = self.counters["served"][tier]
         rej = self.counters["rejected"][tier]
-        return s / max(1, s + rej)
+        pending = max(0, self.counters["preempted"][tier]
+                      - self.counters["restored"][tier])
+        return s / max(1, s + rej + pending)
